@@ -1,0 +1,138 @@
+"""Kernel micro-benchmarks.
+
+This container is CPU-only, so TPU wall-time is not measurable.  What IS
+measured and reported:
+
+  * CPU wall-time of the XLA reference path (jit-compiled, steady-state) —
+    confirms the op is real and gives the harness its us_per_call column;
+  * the analytic VMEM working set of each Pallas kernel's BlockSpec tiling
+    (must fit the ~16 MiB v5e VMEM — a structural property of the kernel
+    that doesn't need hardware);
+  * the arithmetic-intensity (FLOPs/byte) of the op at the bench shape,
+    which with the v5e ridge point (197e12/819e9 ~ 241 FLOP/B) says on
+    which side of the roofline the kernel sits.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+VMEM_BYTES = 16 * 2 ** 20
+RIDGE = 197e12 / 819e9
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_fused_mlp():
+    n, d, m = 1024, 1024, 4096
+    bn, bh = 256, 512
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (n, d), jnp.float32)
+    w1 = jax.random.normal(ks[1], (d, m), jnp.float32) * 0.02
+    w2 = jax.random.normal(ks[2], (m, d), jnp.float32) * 0.02
+    f = jax.jit(lambda x, w1, w2: ref.fused_mlp_ref(x, w1, None, w2, None))
+    us = _time(f, x, w1, w2)
+    vmem = (bn * d + 2 * d * bh + bh * d + bn * d) * 2 + bn * d * 4
+    flops = 4 * n * d * m
+    bytes_ = (n * d + 2 * d * m + n * d) * 2
+    print(f"kernel.fused_mlp,{us:.0f},"
+          f"vmem_tile_bytes={vmem} fits_vmem={vmem < VMEM_BYTES} "
+          f"intensity={flops/bytes_:.0f}FLOP/B ridge={RIDGE:.0f} "
+          f"side={'compute' if flops/bytes_ > RIDGE else 'memory'}")
+
+
+def bench_flash_attention():
+    b, h, n, dh = 4, 8, 2048, 128
+    bq = bk = 128
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, h, n, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, n, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, n, dh), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = _time(f, q, k, v)
+    vmem = (bq * dh + 2 * bk * dh + bq * dh) * 2 + (bq * bk + bq * dh) * 4
+    flops = 4 * b * h * n * n * dh / 2        # causal half
+    bytes_ = (3 + 1) * b * h * n * dh * 2
+    print(f"kernel.head_attention,{us:.0f},"
+          f"vmem_tile_bytes={vmem} fits_vmem={vmem < VMEM_BYTES} "
+          f"intensity={flops/bytes_:.0f}FLOP/B "
+          f"side={'compute' if flops/bytes_ > RIDGE else 'memory'}")
+
+
+def bench_decode_attention():
+    b, hq, hkv, s, dh = 32, 32, 8, 8192, 128
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, hq, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, s, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, s, dh), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+
+    def dec(q, kc, vc, lens):
+        from repro.kernels.ops import decode_attention
+        return decode_attention(q, kc, vc, lens, backend="xla")
+
+    us = _time(jax.jit(dec), q, kc, vc, lens)
+    flops = 4 * b * hq * s * dh
+    bytes_ = 2 * b * hkv * s * dh * 2
+    print(f"kernel.decode_attention,{us:.0f},"
+          f"intensity={flops/bytes_:.1f}FLOP/B side=memory "
+          f"(decode is bandwidth-bound by construction)")
+
+
+def bench_int8_matmul():
+    m, k, n = 1024, 1024, 1024
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    xq = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    f = jax.jit(lambda a, b: ref.int8_matmul_ref(a, b))
+    us = _time(f, xq, wq)
+    flops = 2 * m * k * n
+    bytes_ = m * k + k * n + m * n * 4
+    print(f"kernel.int8_matmul,{us:.0f},"
+          f"intensity={flops/bytes_:.0f}FLOP/B "
+          f"bytes_vs_bf16=0.5x")
+
+
+def bench_vita_msa():
+    n, d, h, dh = 256, 768, 12, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    z = jax.random.normal(ks[0], (n, d), jnp.float32) * 0.3
+    wq = jax.random.normal(ks[1], (h, d, dh)) * 0.03
+    wk = jax.random.normal(ks[2], (h, d, dh)) * 0.03
+    wv = jax.random.normal(ks[3], (h, d, dh)) * 0.03
+    f = jax.jit(lambda z, a, b, c: ref.vita_msa_ref(z, a, b, c))
+    us = _time(f, z, wq, wk, wv)
+    # per-head working set (the paper's BRAM argument, mapped to VMEM)
+    per_head = (n * d + 3 * d * dh) * 2 + (3 * n * dh + n * n) * 4
+    all_heads = (n * d + 3 * h * d * dh) * 2 + (3 * n * d + h * n * n) * 4
+    print(f"kernel.vita_msa,{us:.0f},"
+          f"per_head_bytes={per_head} fits_vmem={per_head < VMEM_BYTES} "
+          f"all_heads_bytes={all_heads} "
+          f"all_heads_fit={all_heads < VMEM_BYTES} "
+          f"(head-level staging is what makes it fit)")
+
+
+def main():
+    print("# Kernel micro-bench (CPU walltime of XLA path; VMEM/intensity "
+          "are analytic TPU-side properties)")
+    bench_fused_mlp()
+    bench_flash_attention()
+    bench_decode_attention()
+    bench_int8_matmul()
+    bench_vita_msa()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness — one section per paper table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+Sections:
+  * Table III / IV / V reproductions (analytical ViTA model)
+  * PE-config sweep (Eq. 5 optimality)
+  * int8 PTQ accuracy delta (synthetic ImageNet stand-in)
+  * kernel micro-bench (CPU walltime + analytic VMEM/intensity)
+  * serving throughput (reduced LM, slot-based continuous batching)
+  * roofline summary (if dry-run results exist)
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+
+def main() -> None:
+    from benchmarks import (kernel_bench, paper_tables, quant_accuracy,
+                            roofline)
+
+    paper_tables.main()
+    print()
+    quant_accuracy.main()
+    print()
+    kernel_bench.main()
+    print()
+
+    # serving throughput on a reduced config (end-to-end system bench)
+    from repro.launch import serve
+    t0 = time.perf_counter()
+    tps = serve.main(["--arch", "stablelm-3b", "--reduced", "--requests",
+                      "8", "--batch", "4", "--max-new", "16",
+                      "--cache-len", "64"])
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"serve.stablelm_reduced,{us:.0f},tokens_per_s={tps:.1f}")
+    print()
+
+    if os.path.isdir("results/dryrun") and os.listdir("results/dryrun"):
+        roofline.main()
+    else:
+        print("# roofline: no dry-run results found "
+              "(run python -m repro.launch.dryrun --all first)")
+
+
+if __name__ == "__main__":
+    main()

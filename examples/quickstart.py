@@ -1,0 +1,59 @@
+"""Quickstart: the ViTA building blocks in 60 seconds (CPU-friendly).
+
+1. Run the paper's analytical model -> Table IV numbers.
+2. Push a ViT through the float and int8-PTQ inference paths.
+3. Use the fused-MLP / head-streamed-attention ops directly (the Pallas
+   kernels execute in interpret mode on CPU).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import perfmodel as pm
+from repro.core.quant import Calibrator
+from repro.kernels import ops
+from repro.models import vit
+
+# --- 1. the paper's accelerator model -------------------------------------
+report = pm.analyze(pm.PAPER_MODELS["vit_b16_256"])
+print(f"ViT-B/16@256 on ViTA(16x6, 8x4 @150MHz): "
+      f"HUE={report.hue*100:.1f}%  fps={report.fps:.2f}  "
+      f"energy={report.energy_j:.3f} J   (paper: 93.2%, 2.17, 0.406)")
+
+# --- 2. int8 PTQ inference (the paper's deployment mode) ------------------
+cfg = vit.ViTConfig(name="demo", image=64, patch=16, dim=128, heads=4,
+                    layers=2, n_classes=10)
+params = vit.init_params(jax.random.PRNGKey(0), cfg)
+images = jax.random.uniform(jax.random.PRNGKey(1), (4, 64, 64, 3))
+patches = vit.extract_patches(images, cfg.patch)
+
+logits_fp = vit.forward(params, patches, cfg)
+qparams = vit.quantize_vit(params)
+cal = Calibrator()
+vit.forward(qparams, patches, cfg, observer=cal)   # calibration pass
+cal.freeze()
+logits_q = vit.forward(qparams, patches, cfg, observer=cal)
+err = float(jnp.max(jnp.abs(logits_q - logits_fp)))
+print(f"int8 PTQ: max logit delta {err:.4f}; "
+      f"argmax match: {bool(jnp.all(logits_q.argmax(-1)==logits_fp.argmax(-1)))}")
+
+# --- 3. the kernels themselves ---------------------------------------------
+x = jax.random.normal(jax.random.PRNGKey(2), (256, 128))
+w1 = jax.random.normal(jax.random.PRNGKey(3), (128, 512)) * 0.05
+w2 = jax.random.normal(jax.random.PRNGKey(4), (512, 128)) * 0.05
+y_pallas = ops.mlp(x, w1, w2, activation="gelu", backend="pallas")
+y_xla = ops.mlp(x, w1, w2, activation="gelu", backend="xla")
+print(f"fused MLP (pallas interpret vs xla): "
+      f"max err {float(jnp.max(jnp.abs(y_pallas - y_xla))):.2e} "
+      f"(the (N,M) hidden was never materialized)")
+
+q = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 128, 64))
+k = jax.random.normal(jax.random.PRNGKey(6), (1, 2, 128, 64))
+v = jax.random.normal(jax.random.PRNGKey(7), (1, 2, 128, 64))
+o = ops.attention(q, k, v, causal=True, backend="pallas")
+o2 = ops.attention(q, k, v, causal=True, backend="xla")
+print(f"head-streamed attention (GQA 4:2): "
+      f"max err {float(jnp.max(jnp.abs(o - o2))):.2e}")
+print("done.")

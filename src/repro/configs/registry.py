@@ -1,0 +1,130 @@
+"""Architecture registry + the assigned input-shape cells.
+
+40 nominal (arch x shape) cells; inapplicable cells are skipped with the
+reason recorded (DESIGN.md §Shape-cell skips):
+  * long_500k needs sub-quadratic attention -> full-attention archs skip;
+  * encoder-only archs (hubert) have no decode step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "internvl2-26b": "internvl2_26b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "stablelm-3b": "stablelm_3b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+
+def list_archs():
+    return list(_ARCH_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    cell = SHAPES[shape]
+    if cell.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch: no autoregressive decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k dense KV decode is "
+                       "outside the family's operating regime")
+    return True, ""
+
+
+def all_cells():
+    """Every applicable (arch, shape) cell."""
+    for arch in list_archs():
+        cfg = get(arch)
+        for shape in SHAPES:
+            ok, why = cell_supported(cfg, shape)
+            yield arch, shape, ok, why
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (no allocation) per cell
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_inputs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.global_batch, cell.seq_len
+    dt = cfg.param_dtype
+    if cfg.input_mode == "tokens":
+        return {"tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32)}
+    if cfg.input_mode == "tokens+image":
+        st = s - cfg.n_image_tokens
+        return {"tokens": _sds((b, st), jnp.int32),
+                "patch_embeds": _sds((b, cfg.n_image_tokens, cfg.d_model),
+                                     dt),
+                "labels": _sds((b, st), jnp.int32)}
+    # embeds (audio stub frontend)
+    return {"embeds": _sds((b, s, cfg.d_model), dt),
+            "labels": _sds((b, s), jnp.int32)}
+
+
+def prefill_inputs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    return train_inputs(cfg, cell) | {}
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell
+                  ) -> Tuple[Dict[str, Any], Any]:
+    """Returns ({tokens, pos}, caches) as ShapeDtypeStructs."""
+    from repro.models import transformer as tr
+    b = cell.global_batch
+    caches = jax.eval_shape(
+        lambda: tr.init_caches(cfg, b, cell.seq_len))
+    return ({"tokens": _sds((b,), jnp.int32),
+             "pos": _sds((b,), jnp.int32)}, caches)
+
+
+def input_specs(arch: str, shape: str):
+    """Public entry: ShapeDtypeStruct stand-ins for an (arch, shape) cell."""
+    cfg = get(arch)
+    cell = SHAPES[shape]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape} skipped: {why}")
+    if cell.kind == "train":
+        return train_inputs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_inputs(cfg, cell)
+    return decode_inputs(cfg, cell)

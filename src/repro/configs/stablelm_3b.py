@@ -1,0 +1,15 @@
+"""StableLM-3B — dense MHA [hf:stabilityai/stablelm-*; unverified].
+
+32L d_model=2560 32H (kv=32, i.e. MHA) d_ff=6912 vocab=50304.
+head_dim = 80 (non-128-aligned): sharding falls back per the divisibility
+rules; the Pallas attention kernel pads lanes."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=6912, vocab=50304,
+    activation="silu", gated=True, norm="ln",
+    subquadratic=False,
+)

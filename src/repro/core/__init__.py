@@ -1,0 +1,12 @@
+"""The paper's primary contribution, as composable JAX modules.
+
+  * perfmodel   — ViTA's cycle-level schedule model (HUE/fps/energy,
+                  Tables III-V reproduction)
+  * quant       — int8 post-training quantization (weights + activations)
+  * vita_blocks — FusedMLP / HeadPipelinedMSA building blocks shared by the
+                  ViT reproduction and the LM architectures
+"""
+
+from . import perfmodel, quant
+
+__all__ = ["perfmodel", "quant"]

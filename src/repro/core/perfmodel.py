@@ -1,0 +1,416 @@
+"""ViTA analytical performance model (paper-faithful reproduction).
+
+Re-implements the cycle-level schedule of the ViTA accelerator (Nag et al.,
+cs.AR 2023) closely following Sec. III-B and Fig. 2-4:
+
+  * Engine 1 = PE blocks 1,2,3 (each k1 x k2 MACs)  -> Q/K/V projections
+  * Engine 2 = PE blocks 4,5   (each k3 x k4 MACs)  -> QK^T and S.V
+  * Head-level coarse pipeline between the engines (head h vs head h-1)
+  * Row-granular PE4 -> Softmax -> PE5 pipeline inside a head
+  * MSA concat + MLP reuse ALL blocks; MLP uses the inter-layer optimization
+    with half the MAC rows on the hidden layer and half on the output layer
+  * Input-stationary / column-streamed weights with a double-buffered column
+    (bandwidth check: words/cycle must stay under the DRAM budget)
+
+The model reproduces Table III (MAC fractions), Table IV (HUE / fps / energy)
+and Table V (fps/W comparison).  Micro-overheads the paper does not spell out
+numerically (pipeline fill/drain, row/column granularity remainders, LayerNorm
+/ softmax / residual serial passes, requantization) are modelled explicitly
+with hardware-plausible defaults; EXPERIMENTS.md records ours-vs-paper deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Hardware description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class VitaHW:
+    """The ViTA accelerator configuration (Sec. III-B3 / IV)."""
+
+    k1: int = 16
+    k2: int = 6
+    k3: int = 8
+    k4: int = 4
+    n_blocks_e1: int = 3          # PE blocks 1,2,3
+    n_blocks_e2: int = 2          # PE blocks 4,5
+    clock_hz: float = 150e6
+    power_w: float = 0.88
+    # DRAM interface: the paper states the access rate stays "well under
+    # 1 word/cycle"; we take a 32-bit word against an int8 weight stream.
+    dram_bytes_per_cycle: float = 4.0
+    # Dedicated-unit widths (elements/cycle).  LayerNorm / Softmax follow the
+    # design adapted from Lu et al. [18]; residual adder matches LN width.
+    ln_width: int = 8
+    softmax_width: int = 1        # row-pipelined, 1 elem/cycle after exp LUT
+    softmax_latency: int = 12     # pipeline latency of the softmax unit
+    requant_width: int = 16       # int32 -> int8 rescale units
+
+    @property
+    def e1_macs(self) -> int:
+        return self.n_blocks_e1 * self.k1 * self.k2
+
+    @property
+    def e2_macs(self) -> int:
+        return self.n_blocks_e2 * self.k3 * self.k4
+
+    @property
+    def total_macs(self) -> int:
+        return self.e1_macs + self.e2_macs
+
+
+# ---------------------------------------------------------------------------
+# Model descriptions (vision transformers evaluated by the paper)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One stage of a (possibly hierarchical) vision transformer."""
+
+    layers: int
+    dim: int                      # latent dim D for this stage
+    heads: int
+    mlp_ratio: float = 4.0
+    tokens: int = 0               # sequence length N seen by MSA (per window)
+    n_windows: int = 1            # windows per image (Swin); 1 = global MSA
+    patch_merging: bool = False   # patch-merging layer after this stage
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def mlp_hidden(self) -> int:
+        return int(self.dim * self.mlp_ratio)
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionModelSpec:
+    name: str
+    image: Tuple[int, int, int]
+    patch: int
+    stages: Tuple[StageSpec, ...]
+    embed_dim: int                # dim right after patch embedding
+
+    @property
+    def patch_tokens(self) -> int:
+        h, w, _ = self.image
+        return (h // self.patch) * (w // self.patch)
+
+
+def _vit(name: str, image: int, dim: int, heads: int, layers: int,
+         mlp_ratio: float = 4.0, patch: int = 16) -> VisionModelSpec:
+    tokens = (image // patch) ** 2
+    stage = StageSpec(layers=layers, dim=dim, heads=heads,
+                      mlp_ratio=mlp_ratio, tokens=tokens)
+    return VisionModelSpec(name=name, image=(image, image, 3), patch=patch,
+                           stages=(stage,), embed_dim=dim)
+
+
+def vit_b16(image: int = 256) -> VisionModelSpec:
+    return _vit(f"ViT-B/16@{image}", image, 768, 12, 12)
+
+
+def deit_b(image: int = 224) -> VisionModelSpec:
+    return _vit(f"DeiT-B@{image}", image, 768, 12, 12)
+
+
+def deit_s(image: int = 224) -> VisionModelSpec:
+    return _vit(f"DeiT-S@{image}", image, 384, 6, 12)
+
+
+def deit_t(image: int = 224) -> VisionModelSpec:
+    return _vit(f"DeiT-T@{image}", image, 192, 3, 12)
+
+
+def swin_t(image: int = 224) -> VisionModelSpec:
+    """Swin-T: patch 4, window 7, depths (2,2,6,2), dims 96..768."""
+    depths = (2, 2, 6, 2)
+    dims = (96, 192, 384, 768)
+    heads = (3, 6, 12, 24)
+    window = 7
+    base = image // 4             # 56 for 224
+    stages = []
+    for i, (l, d, h) in enumerate(zip(depths, dims, heads)):
+        side = base // (2 ** i)
+        stages.append(StageSpec(
+            layers=l, dim=d, heads=h, mlp_ratio=4.0,
+            tokens=window * window,
+            n_windows=(side // window) ** 2,
+            patch_merging=(i < 3),
+        ))
+    return VisionModelSpec(name=f"Swin-T@{image}", image=(image, image, 3),
+                           patch=4, stages=tuple(stages), embed_dim=96)
+
+
+PAPER_MODELS: Dict[str, VisionModelSpec] = {
+    "vit_b16_256": vit_b16(256),
+    "vit_b16_224": vit_b16(224),
+    "deit_b_224": deit_b(224),
+    "deit_s_224": deit_s(224),
+    "deit_t_224": deit_t(224),
+    "swin_t_224": swin_t(224),
+}
+
+
+# ---------------------------------------------------------------------------
+# MAC counting (Table III)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MacBreakdown:
+    msa: int = 0
+    mlp: int = 0
+    patch_merging: int = 0
+    patch_embed: int = 0
+
+    @property
+    def counted(self) -> int:
+        """MACs the paper's Table III counts (ignores patch embedding)."""
+        return self.msa + self.mlp + self.patch_merging
+
+    @property
+    def total(self) -> int:
+        return self.counted + self.patch_embed
+
+    def fractions(self) -> Dict[str, float]:
+        c = float(self.counted)
+        return {
+            "msa": self.msa / c,
+            "mlp": self.mlp / c,
+            "patch_merging": self.patch_merging / c,
+        }
+
+
+def stage_msa_macs(s: StageSpec) -> int:
+    """MSA MACs for one layer of a stage: QKV + QK^T + SV + concat."""
+    n, d = s.tokens, s.dim
+    per_window = 3 * n * d * d + 2 * n * n * d + n * d * d
+    return per_window * s.n_windows
+
+
+def stage_mlp_macs(s: StageSpec) -> int:
+    n = s.tokens * s.n_windows
+    return 2 * n * s.dim * s.mlp_hidden
+
+
+def stage_patch_merging_macs(s: StageSpec) -> int:
+    if not s.patch_merging:
+        return 0
+    # 2x2 neighbourhood concat (4C) -> linear to 2C over T/4 output tokens.
+    t_out = s.tokens * s.n_windows // 4
+    return t_out * (4 * s.dim) * (2 * s.dim)
+
+
+def count_macs(m: VisionModelSpec) -> MacBreakdown:
+    b = MacBreakdown()
+    h, w, c = m.image
+    b.patch_embed = m.patch_tokens * (c * m.patch * m.patch) * m.embed_dim
+    for s in m.stages:
+        b.msa += s.layers * stage_msa_macs(s)
+        b.mlp += s.layers * stage_mlp_macs(s)
+        b.patch_merging += stage_patch_merging_macs(s)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Cycle model (Table IV)
+# ---------------------------------------------------------------------------
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass
+class PhaseCycles:
+    name: str
+    cycles: float
+    useful_macs: float
+    weight_bytes: float = 0.0
+    bw_stall: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.cycles + self.bw_stall
+
+
+@dataclasses.dataclass
+class PerfReport:
+    model: str
+    hw: VitaHW
+    phases: List[PhaseCycles]
+    total_cycles: float = 0.0
+    useful_macs: float = 0.0
+    hue: float = 0.0
+    fps: float = 0.0
+    latency_s: float = 0.0
+    energy_j: float = 0.0
+    peak_words_per_cycle: float = 0.0
+
+    def row(self) -> Dict[str, float]:
+        return {"hue": self.hue, "fps": self.fps, "energy_j": self.energy_j,
+                "latency_s": self.latency_s}
+
+
+def _gemm_cycles_rowcol(rows: int, contract: int, cols: int,
+                        pe_rows: int, pe_cols: int, n_blocks: int) -> float:
+    """Cycles for a (rows x contract) @ (contract x cols) GEMM on an array of
+    ``n_blocks`` PE blocks of pe_rows x pe_cols MACs.
+
+    ViTA's dataflow: rows of the stationary input map onto PE rows (groups of
+    ``pe_rows``), weight columns stream; each block processes ``pe_cols``
+    columns concurrently (rows share weights).  Ceil-granularity on both the
+    row groups and the column groups models the remainder under-utilization
+    (e.g. N=196 on k1=16 rows -> 94.2% row efficiency).
+    """
+    row_passes = _ceil(rows, pe_rows)
+    col_groups = _ceil(cols, pe_cols * n_blocks)
+    return float(row_passes) * float(col_groups) * float(contract)
+
+
+def msa_phase(hw: VitaHW, s: StageSpec) -> List[PhaseCycles]:
+    """Head-pipelined MSA (Fig. 4) for one layer of a stage."""
+    n, d, dh, k = s.tokens, s.dim, s.head_dim, s.heads
+    # ---- Engine 1: Q, K, V for one head.  PE blocks 1..3 each handle one of
+    # Q/K/V (same shape) -> per-block GEMM (n x d) @ (d x dh).
+    e1 = _gemm_cycles_rowcol(n, d, dh, hw.k1, hw.k2, 1)
+    # ---- Engine 2: PE4 computes QK^T rows, PE5 computes S.V rows behind it.
+    # Row-granular pipeline: per q-row, PE4 does (n x dh) MACs on k3*k4 units.
+    qkt_row = _ceil(n * dh, hw.k3 * hw.k4)
+    sv_row = qkt_row
+    softmax_row = hw.softmax_latency + _ceil(n, max(hw.softmax_width, 1))
+    row_slot = max(qkt_row, sv_row, softmax_row)
+    e2 = float(_ceil(n, 1)) * row_slot + sv_row + softmax_row  # + drain
+    # ---- Head pipeline across k heads: fill + steady state + drain.
+    slot = max(e1, e2)
+    msa_core = e1 + (k - 1) * slot + e2
+    useful = k * (3 * n * d * dh + 2 * n * n * dh)
+    # Weight traffic: 3 * d * dh int8 weights per head (Q,K,V columns).
+    wbytes = float(k * 3 * d * dh)
+    phases = [PhaseCycles("msa_heads", msa_core * s.n_windows,
+                          useful * s.n_windows, wbytes)]
+    # ---- Concat projection W^msa (n x d) @ (d x d), all blocks reused.
+    total_blocks_cols = hw.k2 * hw.n_blocks_e1
+    cc = _gemm_cycles_rowcol(n, d, d, hw.k1, hw.k2, hw.n_blocks_e1)
+    # Engine-2 blocks help with a proportional share (paper: "reuse the same
+    # PE blocks"): scale cycles by MAC share actually usable.
+    cc = cc * (hw.e1_macs / hw.total_macs)
+    phases.append(PhaseCycles("msa_concat", cc * s.n_windows,
+                              float(n * d * d) * s.n_windows,
+                              float(d * d)))
+    return phases
+
+
+def mlp_phase(hw: VitaHW, s: StageSpec) -> PhaseCycles:
+    """Inter-layer optimized MLP (Fig. 3): half rows hidden, half output."""
+    n = s.tokens * s.n_windows
+    d, m = s.dim, s.mlp_hidden
+    half_rows = max(hw.k1 // 2, 1)
+    # Stage 1 GEMM (n x d) @ (d x m) on half the rows of every block; stage 2
+    # GEMM (n x m) @ (m x d) on the other half, one hidden column behind.
+    s1 = _gemm_cycles_rowcol(n, d, m, half_rows, hw.k2, hw.n_blocks_e1)
+    s2 = _gemm_cycles_rowcol(n, m, d, half_rows, hw.k2, hw.n_blocks_e1)
+    # Engine-2 blocks join as additional column capacity (share of MACs).
+    eff = hw.total_macs / hw.e1_macs
+    cycles = max(s1, s2) / eff + d  # +d: drain of the last hidden column
+    useful = float(2 * n * d * m)
+    wbytes = float(2 * d * m)
+    return PhaseCycles("mlp", cycles, useful, wbytes)
+
+
+def aux_phase(hw: VitaHW, s: StageSpec) -> PhaseCycles:
+    """LayerNorm x2, residual x2, requant passes — serial dedicated units."""
+    n = s.tokens * s.n_windows
+    d = s.dim
+    ln = 2 * _ceil(n * d, hw.ln_width)
+    res = 2 * _ceil(n * d, hw.ln_width)
+    rq = 2 * _ceil(n * d, hw.requant_width)
+    return PhaseCycles("aux", float(ln + res + rq), 0.0, 0.0)
+
+
+def patch_merging_phase(hw: VitaHW, s: StageSpec) -> PhaseCycles:
+    t_out = s.tokens * s.n_windows // 4
+    cyc = _gemm_cycles_rowcol(t_out, 4 * s.dim, 2 * s.dim,
+                              hw.k1, hw.k2, hw.n_blocks_e1)
+    cyc = cyc * (hw.e1_macs / hw.total_macs)
+    return PhaseCycles("patch_merging", cyc,
+                       float(t_out * 4 * s.dim * 2 * s.dim),
+                       float(4 * s.dim * 2 * s.dim))
+
+
+def patch_embed_phase(hw: VitaHW, m: VisionModelSpec) -> PhaseCycles:
+    h, w, c = m.image
+    contract = c * m.patch * m.patch
+    cyc = _gemm_cycles_rowcol(m.patch_tokens, contract, m.embed_dim,
+                              hw.k1, hw.k2, hw.n_blocks_e1)
+    cyc = cyc * (hw.e1_macs / hw.total_macs)
+    return PhaseCycles("patch_embed", cyc,
+                       float(m.patch_tokens * contract * m.embed_dim),
+                       float(contract * m.embed_dim))
+
+
+def analyze(m: VisionModelSpec, hw: Optional[VitaHW] = None) -> PerfReport:
+    hw = hw or VitaHW()
+    phases: List[PhaseCycles] = [patch_embed_phase(hw, m)]
+    for s in m.stages:
+        layer_phases = msa_phase(hw, s) + [mlp_phase(hw, s), aux_phase(hw, s)]
+        for _ in range(s.layers):
+            phases.extend(dataclasses.replace(p) for p in layer_phases)
+        if s.patch_merging:
+            phases.append(patch_merging_phase(hw, s))
+    # Bandwidth stalls: weights stream during compute; stall if a phase needs
+    # more than dram_bytes_per_cycle on average (double-buffered columns hide
+    # latency but not throughput).
+    peak = 0.0
+    for p in phases:
+        if p.weight_bytes and p.cycles:
+            need = p.weight_bytes / p.cycles
+            peak = max(peak, need)
+            min_cycles = p.weight_bytes / hw.dram_bytes_per_cycle
+            p.bw_stall = max(0.0, min_cycles - p.cycles)
+    total_cycles = sum(p.total for p in phases)
+    useful = sum(p.useful_macs for p in phases)
+    hue = useful / (hw.total_macs * total_cycles)
+    latency = total_cycles / hw.clock_hz
+    return PerfReport(
+        model=m.name, hw=hw, phases=phases, total_cycles=total_cycles,
+        useful_macs=useful, hue=hue, fps=1.0 / latency, latency_s=latency,
+        energy_j=hw.power_w * latency,
+        peak_words_per_cycle=peak / 4.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper reference values for validation (Tables III, IV, V)
+# ---------------------------------------------------------------------------
+
+PAPER_TABLE3 = {  # model -> (msa%, mlp%, patch_merging%)
+    "vit_b16_256": (36.8, 63.2, 0.0),
+    "vit_b16_224": (36.1, 63.9, 0.0),
+    "deit_s_224": (38.6, 61.4, 0.0),
+    "deit_t_224": (43.1, 56.9, 0.0),
+    "swin_t_224": (31.9, 63.8, 4.3),
+}
+
+PAPER_TABLE4 = {  # model -> (hue%, fps, energy J)
+    "vit_b16_256": (93.2, 2.17, 0.406),
+    "vit_b16_224": (92.8, 2.75, 0.320),
+    "deit_s_224": (87.2, 9.36, 0.094),
+    "deit_t_224": (66.2, 19.01, 0.046),
+    "swin_t_224": (81.0, 8.71, 0.101),
+}
+
+PAPER_TABLE5 = {  # accelerator -> (power W, fps, fps/W) for DeiT-B @224
+    "row_wise_acc_asic40nm": (None, 44.5, None),
+    "auto_vit_acc_fpga16nm": (9.40, 25.9, 2.76),
+    "vita_fpga28nm": (0.88, 2.75, 3.12),
+}

@@ -1,0 +1,5 @@
+"""Distribution layer: sharding rules, fault tolerance, pipeline parallel."""
+
+from . import ft, sharding
+
+__all__ = ["sharding", "ft"]

@@ -1,0 +1,234 @@
+"""GSPMD sharding rules for every architecture / shape cell.
+
+Baseline parallelism (single pod 16x16, multi-pod 2x16x16):
+  * ``data`` (+ ``pod``)  — batch data-parallel; gradient reduction crosses
+    pods once per step (DCN-friendly).
+  * ``model``             — 16-way tensor parallel: column-parallel up/QKV
+    projections, row-parallel down/output projections (Megatron scheme),
+    vocab-sharded embeddings (padded to /256 so every table divides),
+    expert-parallel MoE when n_experts divides the axis (olmoe), otherwise
+    TP inside experts (mixtral).
+
+Rules are *name-based with divisibility fallbacks*: a preferred spec whose
+dimension does not divide the mesh axis degrades to replication on that
+dimension (never a compile error).  This is what lets one rule set cover
+head_dim=80 (stablelm), kv_heads=1 (recurrentgemma MQA), 8 experts on a
+16-way axis (mixtral), etc.
+
+Stacked layer params (leading n_superblocks dim from the scan) get a
+prepended None.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# name -> (spec for the *unstacked* shape); "M" = model axis placeholder
+_COL = ("wq", "wk", "wv", "w_up", "w_gate", "w_x", "w_gate_branch",
+        "w_in", "w_z", "w_q", "w_k", "w_v", "w_input_gate", "w_rec_gate",
+        "unembed", "in_proj")
+_ROW = ("wo", "w_down", "w_out", "w_msa")
+_COL_BIAS = ("bq", "bk", "bv", "b_up", "b_in", "a_param", "gn_w")
+
+
+def _axis_size(mesh, name: str) -> int:
+    sizes = getattr(mesh, "axis_sizes", None)
+    if sizes is None:
+        sizes = mesh.devices.shape
+    return dict(zip(mesh.axis_names, sizes)).get(name, 1)
+
+
+def _fits(shape: Tuple[int, ...], spec: Sequence, mesh: Mesh) -> P:
+    """Replace axis names that don't divide the dim with None."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = np.prod([_axis_size(mesh, a) for a in
+                        (ax if isinstance(ax, tuple) else (ax,))])
+        fixed.append(ax if dim % int(size) == 0 else None)
+    return P(*fixed)
+
+
+def _param_rule(path_keys: Tuple[str, ...], shape: Tuple[int, ...],
+                mesh: Mesh, cfg: ModelConfig) -> P:
+    name = path_keys[-1]
+    stacked = "layers" in path_keys
+    base_shape = shape[1:] if stacked else shape
+
+    in_moe = "moe" in path_keys
+    if in_moe and name in ("w_up", "w_gate", "w_down"):
+        e = base_shape[0]
+        if e % _axis_size(mesh, "model") == 0:
+            spec = ("model", None, None)                  # expert parallel
+        elif name == "w_down":
+            spec = (None, "model", None)                  # TP inside expert
+        else:
+            spec = (None, None, "model")
+    elif in_moe and name == "router":
+        spec = (None, None)
+    elif name == "embed":
+        spec = ("model", None)
+    elif name in _COL and len(base_shape) == 2:
+        spec = (None, "model")
+    elif name in ("w_q", "w_k", "w_v") and len(base_shape) == 3:
+        spec = (None, None, "model")        # block-diagonal per-head (xLSTM)
+    elif name in _ROW and len(base_shape) == 2:
+        spec = ("model", None)
+    elif name == "conv_w":
+        spec = (None, "model")
+    elif name in _COL_BIAS and len(base_shape) == 1:
+        spec = ("model",)
+    else:
+        spec = (None,) * len(base_shape)
+    if stacked:
+        spec = (None,) + tuple(spec)
+        base_shape = shape
+    return _fits(shape, spec, mesh)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching a params (shape) tree."""
+    def rule(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+        return _param_rule(keys, tuple(leaf.shape), mesh, cfg)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def named(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _batch_axis(batch_size: int, mesh: Mesh):
+    """Largest prefix of (pod, data) that divides the batch."""
+    axes = dp_axes(mesh)
+    size = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    if axes and batch_size % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if "data" in mesh.axis_names and batch_size % _axis_size(
+            mesh, "data") == 0:
+        return "data"
+    return None
+
+
+def train_batch_specs(cfg: ModelConfig, batch_shapes: Dict[str, Any],
+                      mesh: Mesh) -> Dict[str, P]:
+    specs = {}
+    for k, v in batch_shapes.items():
+        b = v.shape[0]
+        ax = _batch_axis(b, mesh)
+        specs[k] = P(ax, *([None] * (len(v.shape) - 1)))
+    return specs
+
+
+def cache_spec_tree(cfg: ModelConfig, caches_shape: Any, mesh: Mesh,
+                    batch_size: int) -> Any:
+    """Specs for the stacked cache pytree (leading dim = n_superblocks)."""
+    bax = _batch_axis(batch_size, mesh)
+    m = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        name = str(getattr(path[-1], "key", path[-1]))
+        # all caches: (sb, B, ...)
+        spec = [None, bax]
+        rest = shape[2:]
+        if name in ("k", "v") and len(rest) == 3:       # (Hkv, S, Dh)
+            hkv, s, dh = rest
+            if hkv % m == 0:
+                spec += ["model", None, None]
+            elif dh % m == 0:
+                spec += [None, None, "model"]
+            else:
+                spec += [None, None, None]
+        elif name in ("h", "c", "n", "m", "conv", "C"):
+            # recurrent states: shard the (last) feature dim when divisible
+            sub = [None] * len(rest)
+            for i in range(len(rest) - 1, -1, -1):
+                if rest[i] % m == 0:
+                    sub[i] = "model"
+                    break
+            spec += sub
+        else:
+            spec += [None] * len(rest)
+        return _fits(shape, tuple(spec), mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, caches_shape)
+
+
+def fsdp_widen(param_spec_tree: Any, params_shape: Any, mesh,
+               min_elems: int = 1 << 20) -> Any:
+    """ZeRO-3/FSDP: additionally shard big params over ``data`` at rest.
+    XLA inserts the per-layer all-gathers; grads reduce-scatter back."""
+    dsize = _axis_size(mesh, "data")
+
+    def widen(spec, leaf):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if n < min_elems or dsize <= 1:
+            return spec
+        dims = list(tuple(spec)) + \
+            [None] * (len(leaf.shape) - len(tuple(spec)))
+        for i, (dim, ax) in enumerate(zip(leaf.shape, dims)):
+            if ax is None and dim % dsize == 0:
+                dims[i] = "data"
+                break
+        return P(*dims)
+
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        param_spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_l = treedef.flatten_up_to(params_shape)
+    return treedef.unflatten([widen(s, l) for s, l in zip(flat_s, flat_l)])
+
+
+def opt_state_specs(param_spec_tree: Any, params_shape: Any = None,
+                    mesh=None, zero1: bool = True) -> Any:
+    """Optimizer-moment sharding.
+
+    Default = ZeRO-1: moments additionally shard their first
+    data-divisible unsharded dim over ``data`` (Adam state for a 46B model
+    never fits at DP x TP16 alone — verified by tests/test_sharding.py).
+    """
+    mom = param_spec_tree
+    if zero1 and params_shape is not None and mesh is not None:
+        dsize = _axis_size(mesh, "data")
+
+        def widen(spec, leaf):
+            dims = list(tuple(spec)) + \
+                [None] * (len(leaf.shape) - len(tuple(spec)))
+            for i, (dim, ax) in enumerate(zip(leaf.shape, dims)):
+                if ax is None and dim % dsize == 0 and dsize > 1:
+                    dims[i] = "data"
+                    break
+            return P(*dims)
+
+        flat_s, treedef = jax.tree_util.tree_flatten(
+            param_spec_tree, is_leaf=lambda x: isinstance(x, P))
+        flat_l = treedef.flatten_up_to(params_shape)
+        mom = treedef.unflatten([widen(s, l)
+                                 for s, l in zip(flat_s, flat_l)])
+    return {
+        "m": mom,
+        "v": mom,
+        "count": P(),
+    }

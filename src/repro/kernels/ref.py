@@ -1,0 +1,180 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function is the mathematical ground truth the kernels are validated
+against (tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+These are also the ``backend="xla"`` execution path used for CPU tests and
+for dry-run lowering (XLA sees real FLOPs, a custom-call would be opaque).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),   # Nemotron squared-ReLU
+        "silu": jax.nn.silu,
+        "identity": lambda x: x,
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# Fused MLP (ViTA inter-layer optimization) — oracle
+# ---------------------------------------------------------------------------
+
+
+def fused_mlp_ref(x: jax.Array, w1: jax.Array, b1: Optional[jax.Array],
+                  w2: jax.Array, b2: Optional[jax.Array],
+                  *, activation: str = "gelu",
+                  w_gate: Optional[jax.Array] = None,
+                  acc_dtype=jnp.float32) -> jax.Array:
+    """out = act(x @ w1 + b1) [* (x @ w_gate)] @ w2 + b2.
+
+    With ``w_gate`` given this is the gated (SwiGLU-style) variant:
+    h = act(x @ w_gate) * (x @ w1).
+    """
+    xf = x.astype(acc_dtype)
+    h = jnp.dot(xf, w1.astype(acc_dtype))
+    if b1 is not None:
+        h = h + b1.astype(acc_dtype)
+    if w_gate is not None:
+        g = jnp.dot(xf, w_gate.astype(acc_dtype))
+        h = act_fn(activation)(g) * h
+    else:
+        h = act_fn(activation)(h)
+    out = jnp.dot(h, w2.astype(acc_dtype))
+    if b2 is not None:
+        out = out + b2.astype(acc_dtype)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — oracle (GQA / causal / sliding-window / segment mask)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  *, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None,
+                  q_offset: int = 0,
+                  acc_dtype=jnp.float32) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, Hq, Nq, Dh);  k, v: (B, Hkv, Nk, Dh) with Hq % Hkv == 0 (GQA).
+    ``window``: sliding-window size (a query attends to keys in
+    (pos - window, pos]).  ``q_offset``: absolute position of q[...,0,:]
+    relative to k (for decode: q_offset = Nk - Nq).
+    """
+    b, hq, nq, dh = q.shape
+    _, hkv, nk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(acc_dtype),
+                   kr.astype(acc_dtype)) * scale
+
+    qpos = jnp.arange(nq)[:, None] + q_offset
+    kpos = jnp.arange(nk)[None, :]
+    mask = jnp.ones((nq, nk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> 0
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(acc_dtype))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ViTA fused per-head MSA — oracle
+# ---------------------------------------------------------------------------
+
+
+def vita_msa_ref(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
+                 *, acc_dtype=jnp.float32) -> jax.Array:
+    """Per-head fused QKV projection + attention (the head-level pipeline).
+
+    z: (N, D); wq/wk/wv: (H, D, Dh).  Returns (H, N, Dh) — the SA_i(z) of
+    Eq. (1)-(3); the concat @ W^msa of Eq. (4) happens outside.
+    Non-causal (vision) attention.
+    """
+    h, d, dh = wq.shape
+    zf = z.astype(acc_dtype)
+    q = jnp.einsum("nd,hde->hne", zf, wq.astype(acc_dtype))
+    k = jnp.einsum("nd,hde->hne", zf, wk.astype(acc_dtype))
+    v = jnp.einsum("nd,hde->hne", zf, wv.astype(acc_dtype))
+    s = jnp.einsum("hne,hme->hnm", q, k) * (dh ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hnm,hme->hne", p, v).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul — oracle
+# ---------------------------------------------------------------------------
+
+
+def int8_matmul_ref(x_q: jax.Array, w_q: jax.Array,
+                    x_scale: Optional[jax.Array] = None,
+                    w_scale: Optional[jax.Array] = None,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """int8 x int8 -> int32, optionally rescaled to float."""
+    acc = jax.lax.dot_general(x_q, w_q, (((x_q.ndim - 1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    if x_scale is None and w_scale is None:
+        return acc
+    s = jnp.asarray(1.0, jnp.float32)
+    if x_scale is not None:
+        s = s * x_scale.astype(jnp.float32)
+    if w_scale is not None:
+        s = s * w_scale.astype(jnp.float32)
+    return (acc.astype(jnp.float32) * s).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma) — sequential oracle
+# ---------------------------------------------------------------------------
+
+
+def rglru_ref(x: jax.Array, a: jax.Array, gate_x: jax.Array,
+              gate_a: jax.Array, h0: Optional[jax.Array] = None,
+              *, c: float = 8.0) -> jax.Array:
+    """Real-Gated Linear Recurrent Unit (sequential scan oracle).
+
+    x, gate_x, gate_a: (B, T, D) — inputs and gate pre-activations.
+    a: (D,) — recurrence parameter pre-activation (Lambda).
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    with a_t = exp(-c * softplus(a) * sigmoid(gate_a)), i_t = sigmoid(gate_x).
+    """
+    b, t, d = x.shape
+    log_a = -c * jax.nn.softplus(a)[None] * jax.nn.sigmoid(gate_a)   # (B,T,D)
+    a_t = jnp.exp(log_a)
+    gated_x = jax.nn.sigmoid(gate_x) * x
+    # sqrt(1 - a_t^2) computed in log space for stability
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a_t), 1e-12))
+    inp = multiplier * gated_x
+
+    def step(h, xs):
+        a_i, in_i = xs
+        h = a_i * h + in_i
+        return h, h
+
+    h0 = jnp.zeros((b, d), x.dtype) if h0 is None else h0
+    _, ys = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(a_t, 1, 0), jnp.moveaxis(inp, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)

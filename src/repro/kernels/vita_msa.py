@@ -1,0 +1,69 @@
+"""Paper-faithful fused per-head MSA Pallas kernel (ViT-scale).
+
+This is the direct TPU transcription of ViTA's two-engine head pipeline
+(Sec. III-B2, Fig. 2/4) for vision-transformer sequence lengths (N ~ 49-256,
+where one head's *entire* working set fits in VMEM):
+
+  grid = (heads,)                  # head-level coarse-grained pipeline
+  per step h:
+    engine-1 analogue: Q = z @ Wq[h]; K = z @ Wk[h]; V = z @ Wv[h]
+    engine-2 analogue: SA[h] = softmax(Q K^T / sqrt(Dh)) @ V
+
+* z (the layer input) is the stationary operand, revisited by every head —
+  ViTA's input-stationary dataflow.
+* Wq/Wk/Wv for head h+1 are DMA'd into VMEM while head h computes (Pallas
+  grid pipelining) — the double-buffered weight-column BRAM ping-pong.
+* Only ONE head's Q/K/V/S ever exists on-chip, exactly the paper's memory
+  argument for head-wise computation.
+
+For LM-scale sequence lengths, `head_attention.flash_attention` is the
+streaming generalization (row-granular online softmax).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _vita_msa_kernel(z_ref, wq_ref, wk_ref, wv_ref, o_ref, *, scale: float):
+    z = z_ref[...]
+    # Engine 1: per-head projections (PE blocks 1-3).
+    q = jnp.dot(z, wq_ref[0], preferred_element_type=jnp.float32)
+    k = jnp.dot(z, wk_ref[0], preferred_element_type=jnp.float32)
+    v = jnp.dot(z, wv_ref[0], preferred_element_type=jnp.float32)
+    # Engine 2: QK^T (PE block 4) -> softmax -> S.V (PE block 5).
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p.astype(z.dtype), v.astype(z.dtype),
+                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vita_msa(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
+             *, interpret: bool = False) -> jax.Array:
+    """z: (N, D); wq/wk/wv: (H, D, Dh) -> (H, N, Dh) per-head attention."""
+    n, d = z.shape
+    h, _, dh = wq.shape
+    kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),       # z stationary
+            pl.BlockSpec((1, d, dh), lambda i: (i, 0, 0)),  # head weights
+            pl.BlockSpec((1, d, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, dh), z.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(z, wq, wk, wv)

@@ -1,0 +1,45 @@
+"""Production mesh construction.
+
+Single pod = 16x16 = 256 chips ("data" x "model"); multi-pod adds a leading
+"pod" axis (2 x 16 x 16 = 512 chips).  Defined as functions so importing
+this module never touches jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init;
+tests and benches must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(*, multi_pod: bool = False, model: int = 2,
+                    data: int = 2) -> Mesh:
+    """Tiny mesh with the same axis names (smoke-testing the dry-run)."""
+    shape = (2, data, model) if multi_pod else (data, model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,126 @@
+"""Step functions (train / prefill / decode) shared by the launcher, the
+dry-run and the examples.
+
+Each factory closes over the ModelConfig and returns a pure function ready
+for jax.jit with explicit in/out shardings.  Buffer donation (params, opt
+state, caches) is applied at the jit call-site in dryrun/train/serve.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tr
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import ef_compress_grads
+
+
+def make_train_step(cfg: ModelConfig,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    lr_fn: Optional[Callable] = None,
+                    grad_compression: bool = False) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    With ``grad_compression`` the gradients pass through int8
+    error-feedback compression (opt_state carries the residuals) —
+    modelling the compressed cross-pod all-reduce.
+    """
+    lr_fn = lr_fn or (lambda step: jnp.asarray(3e-4, jnp.float32))
+
+    def step_fn(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(
+            tr.loss_fn, has_aux=True)(params, batch, cfg)
+        if grad_compression:
+            grads, new_resid = ef_compress_grads(
+                grads, opt_state["ef_residuals"])
+        lr = lr_fn(step)
+        new_params, new_adam, opt_metrics = adamw_update(
+            grads, opt_state["adam"], params, lr, opt_cfg)
+        new_state = {"adam": new_adam}
+        if grad_compression:
+            new_state["ef_residuals"] = new_resid
+        metrics = dict(metrics, **opt_metrics, lr=lr)
+        return new_params, new_state, metrics
+
+    return step_fn
+
+
+def init_opt_state(params: Any, grad_compression: bool = False
+                   ) -> Dict[str, Any]:
+    state = {"adam": adamw_init(params)}
+    if grad_compression:
+        from repro.optim.compress import ef_init
+        state["ef_residuals"] = ef_init(params)
+    return state
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int) -> Callable:
+    """(params, batch) -> (next_token (B,), caches)."""
+
+    def prefill_fn(params, batch):
+        logits, caches = tr.prefill(params, batch, cfg, cache_len)
+        next_tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1)[:, 0]
+        return next_tok.astype(jnp.int32), caches
+
+    return prefill_fn
+
+
+def make_decode_step(cfg: ModelConfig, sample: str = "greedy") -> Callable:
+    """(params, tokens (B,), caches, pos (B,)) -> (next tokens, caches)."""
+
+    def decode_fn(params, tokens, caches, pos):
+        logits, caches = tr.decode_step(params, tokens, caches, pos, cfg)
+        next_tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
+        return next_tok.astype(jnp.int32), caches
+
+    return decode_fn
+
+
+def make_forward_step(cfg: ModelConfig) -> Callable:
+    """Encoder / no-cache inference forward: (params, batch) -> logits."""
+
+    def forward_fn(params, batch):
+        return tr.forward(params, batch, cfg)
+
+    return forward_fn
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOP model (roofline MODEL_FLOPS = 6*N*D / 2*N_active per token)
+# ---------------------------------------------------------------------------
+
+
+def active_param_count(cfg: ModelConfig, params_shape: Any) -> Tuple[int, int]:
+    """(total params, active-per-token params).  MoE: router + top_k experts
+    of each layer count as active; embeddings excluded from FLOPs by the
+    6ND convention (matmul params only)."""
+    leaves = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    total = active = 0
+    for path, leaf in leaves:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "embed" in keys[-1] or "unembed" in keys[-1]:
+            continue
+        if "moe" in keys and keys[-1] in ("w_up", "w_gate", "w_down"):
+            e = cfg.moe.n_experts
+            active += n * cfg.moe.top_k // e
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, params_shape: Any, cell_kind: str,
+                tokens: int) -> float:
+    """Reference useful FLOPs for the cell (6*N_active*D train,
+    2*N_active*D inference)."""
+    _, active = active_param_count(cfg, params_shape)
+    per_tok = 6.0 * active if cell_kind == "train" else 2.0 * active
+    return per_tok * tokens

@@ -1,0 +1,6 @@
+"""Model zoo: LM backbone (all 10 assigned archs) + ViT/DeiT/Swin."""
+
+from . import config, layers, recurrent, swin, transformer, vit, xlstm
+
+__all__ = ["config", "layers", "transformer", "recurrent", "xlstm", "vit",
+           "swin"]

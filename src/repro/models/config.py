@@ -1,0 +1,135 @@
+"""Master model configuration shared by all architectures.
+
+Every assigned architecture (src/repro/configs/<id>.py) instantiates a
+``ModelConfig``.  Heterogeneous stacks (RecurrentGemma's 2:1
+recurrent:attention, xLSTM's mLSTM/sLSTM interleave) are expressed as a
+repeating ``pattern`` of block kinds; layers are scanned per-superblock so
+the lowered HLO stays small for 64-layer models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff: int                       # per-expert hidden dim
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | vlm | hybrid | ssm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # --- block structure ---
+    pattern: Tuple[str, ...] = ("attn",)   # kinds: attn | rec | mlstm | slstm
+    moe: Optional[MoESpec] = None          # replaces dense MLP when set
+    # --- attention options ---
+    window: Optional[int] = None           # SWA size (None = full attention)
+    qkv_bias: bool = False
+    causal: bool = True                    # False = encoder-only (hubert)
+    rope_theta: Optional[float] = 10000.0
+    # --- mlp options ---
+    activation: str = "silu"
+    gated: bool = True
+    mlp_bias: bool = False
+    # --- recurrent (RG-LRU) options ---
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    # --- embedding/IO ---
+    input_mode: str = "tokens"             # tokens | embeds | tokens+image
+    n_image_tokens: int = 0                # for input_mode=tokens+image
+    embed_dim_in: Optional[int] = None     # for input_mode=embeds stubs
+    tie_embeddings: bool = False
+    vocab_pad_multiple: int = 256
+    norm: str = "rms"                      # rms | ln
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"
+    backend: Optional[str] = None          # None -> ops module default
+    remat: bool = False                    # activation checkpoint superblocks
+    unroll: bool = False                   # unroll superblock scan (dry-run:
+    #   XLA cost_analysis ignores while-loop trip counts, so the roofline
+    #   lowering unrolls to make HLO_FLOPs/bytes/collectives exact)
+    # --- perf-iteration knobs (§Perf hillclimb variants) ---
+    seq_shard: bool = False                # megatron-SP: shard the sequence
+    #   dim of the residual stream over `model` between blocks (turns the
+    #   per-block TP all-reduce into reduce-scatter + all-gather)
+    fsdp: bool = False                     # shard params over `data` at rest
+    #   (ZeRO-3); XLA inserts per-layer all-gathers
+    moe_ep_virtual: int = 1                # split experts along d_ff into
+    #   E*v virtual experts so EP divides the model axis (mixtral: 8e x2)
+    attn_dp: bool = False                  # pin q/k/v/o replicated over
+    #   `model` for the XLA attention path: stops GSPMD splitting the score
+    #   einsum over head_dim, which all-reduces (S,S)-shaped f32 partials
+    #   (measured 43 GB per op on qwen prefill_32k — §Perf)
+    block_barrier: bool = False            # optimization_barrier between
+    #   blocks: stops XLA reassociating the TP all-reduce past the norm's
+    #   f32 cast (verified 2x wire-byte inflation without it)
+    bf16_reduce: bool = False              # with_sharding_constraint on the
+    #   mixer/FF outputs pre-residual: forces the row-parallel partial-sum
+    #   all-reduce to resolve in bf16 instead of sinking into the next
+    #   norm's f32 region
+    # --- shape-cell support metadata (DESIGN.md skip table) ---
+    supports_decode: bool = True
+    subquadratic: bool = False             # can run long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab // m) * m
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_superblocks(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, \
+            (self.name, self.n_layers, self.pattern)
+        return self.n_layers // len(self.pattern)
+
+    def kv_cache_len(self, seq_len: int) -> int:
+        """Per-layer KV length: SWA bounds the cache by the window."""
+        if self.window is not None:
+            return min(seq_len, self.window)
+        return seq_len
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=len(self.pattern) * 2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, 4 * self.n_kv_heads // self.n_heads),
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab=256,
+            window=min(self.window, 32) if self.window else None,
+            lru_width=64 if self.lru_width else None,
+            # dropless capacity so smoke tests can assert decode==forward
+            moe=MoESpec(n_experts=8, top_k=min(self.moe.top_k, 2), d_ff=32,
+                        capacity_factor=4.0)
+            if self.moe else None,
+            n_image_tokens=8 if self.n_image_tokens else 0,
+            dtype="float32",
+            vocab_pad_multiple=16,
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent mixer (RecurrentGemma / Griffin).
+
+The recurrent block: x -> {gate branch: linear+GeLU} x {recurrence branch:
+linear -> causal depthwise conv(4) -> RG-LRU} -> elementwise product ->
+output linear.  Training/prefill uses an associative scan (log-depth,
+TPU-friendly); decode is the O(1) sequential update.  Equivalence against
+the sequential oracle (`kernels.ref.rglru_ref`) is property-tested.
+
+ViTA-applicability note (DESIGN.md): the head-streamed attention technique
+does not apply to this mixer (attention-free); the fused-MLP technique still
+applies to the block's MLP.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .config import ModelConfig
+from .layers import Params, dense_init
+
+C_RGLRU = 8.0
+
+
+def rec_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], d, w, dtype),
+        "w_gate_branch": dense_init(ks[1], d, w, dtype),
+        "w_out": dense_init(ks[2], w, d, dtype),
+        # depthwise causal conv
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, w)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # RG-LRU gates + Lambda
+        "w_input_gate": dense_init(ks[4], w, w, dtype),
+        "w_rec_gate": dense_init(ks[5], w, w, dtype),
+        "a_param": (jax.random.uniform(ks[6], (w,), jnp.float32,
+                                       0.744, 0.963)).astype(jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B,T,W); w: (K,W).  state: (B,K-1,W)."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return out + b, new_state
+
+
+def _rglru_coeffs(p: Params, xw: jax.Array):
+    """a_t and the scaled input for the linear recurrence (fp32)."""
+    xf = xw.astype(jnp.float32)
+    gate_in = jax.nn.sigmoid(xf @ p["w_input_gate"].astype(jnp.float32))
+    gate_rec = jax.nn.sigmoid(xf @ p["w_rec_gate"].astype(jnp.float32))
+    log_a = -C_RGLRU * jax.nn.softplus(p["a_param"]) * gate_rec
+    a_t = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a_t), 1e-12))
+    inp = mult * (gate_in * xf)
+    return a_t, inp
+
+
+def _assoc_scan(a_t: jax.Array, inp: jax.Array, h0: jax.Array,
+                backend=None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + inp_t via ops.linear_recurrence (pallas
+    rglru_scan kernel on TPU, associative_scan on the xla path)."""
+    inp = inp.at[:, 0].add(a_t[:, 0] * h0)   # fold h0 into the first input
+    return ops.linear_recurrence(a_t, inp, backend=backend)
+
+
+def rec_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                positions=None) -> jax.Array:
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32))
+    xw, _ = _causal_conv(x @ p["w_x"], p["conv_w"], p["conv_b"])
+    a_t, inp = _rglru_coeffs(p, xw)
+    h0 = jnp.zeros((x.shape[0], inp.shape[-1]), jnp.float32)
+    h = _assoc_scan(a_t, inp, h0, backend=cfg.backend)
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+def rec_init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                   dtype) -> Dict[str, jax.Array]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rec_prefill(p: Params, x: jax.Array, cfg: ModelConfig, cache_len: int
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32))
+    xw, conv_state = _causal_conv(x @ p["w_x"], p["conv_w"], p["conv_b"])
+    a_t, inp = _rglru_coeffs(p, xw)
+    h0 = jnp.zeros((x.shape[0], inp.shape[-1]), jnp.float32)
+    h = _assoc_scan(a_t, inp, h0)
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"], {"h": h[:, -1], "conv": conv_state}
+
+
+def rec_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+               pos, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, D) one token."""
+    gate = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32))
+    xw1, conv_state = _causal_conv((x @ p["w_x"])[:, None],
+                                   p["conv_w"], p["conv_b"],
+                                   cache["conv"])
+    a_t, inp = _rglru_coeffs(p, xw1)
+    h = a_t[:, 0] * cache["h"] + inp[:, 0]
+    y = (h * gate).astype(x.dtype)
+    return y @ p["w_out"], {"h": h, "conv": conv_state}

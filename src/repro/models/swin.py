@@ -1,0 +1,185 @@
+"""Swin-T (Liu et al. 2021) — windowed/shifted MSA + patch merging.
+
+ViTA runs Swin by re-using the same PE configuration with control-logic
+changes only: W-MSA is "the regular MSA performed on N=49 repeatedly over
+these windows" (Sec. IV).  Here each window's attention goes through the
+same per-head fused computation; the MLP uses the fused inter-layer op.
+Includes relative position bias and the shifted-window region masking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .layers import Params, dense_init, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SwinConfig:
+    name: str = "swin_t_224"
+    image: int = 224
+    patch: int = 4
+    embed_dim: int = 96
+    depths: Tuple[int, ...] = (2, 2, 6, 2)
+    heads: Tuple[int, ...] = (3, 6, 12, 24)
+    window: int = 7
+    mlp_ratio: float = 4.0
+    n_classes: int = 1000
+    backend: Optional[str] = None
+    dtype: str = "float32"
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+
+def _rel_pos_index(w: int) -> np.ndarray:
+    coords = np.stack(np.meshgrid(np.arange(w), np.arange(w),
+                                  indexing="ij")).reshape(2, -1)
+    rel = coords[:, :, None] - coords[:, None, :]          # (2, N, N)
+    rel = rel.transpose(1, 2, 0) + (w - 1)
+    return (rel[..., 0] * (2 * w - 1) + rel[..., 1]).astype(np.int32)
+
+
+def init_params(key, cfg: SwinConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = iter(jax.random.split(key, 200))
+    params: Params = {
+        "patch_embed": dense_init(next(ks), cfg.patch_dim, cfg.embed_dim,
+                                  dtype),
+        "pe_ln_w": jnp.ones((cfg.embed_dim,), dtype),
+        "pe_ln_b": jnp.zeros((cfg.embed_dim,), dtype),
+    }
+    stages = []
+    dim = cfg.embed_dim
+    for s_i, (depth, n_heads) in enumerate(zip(cfg.depths, cfg.heads)):
+        blocks = []
+        for _ in range(depth):
+            hid = int(dim * cfg.mlp_ratio)
+            blocks.append({
+                "ln1_w": jnp.ones((dim,), dtype),
+                "ln1_b": jnp.zeros((dim,), dtype),
+                "w_qkv": dense_init(next(ks), dim, 3 * dim, dtype),
+                "b_qkv": jnp.zeros((3 * dim,), dtype),
+                "w_msa": dense_init(next(ks), dim, dim, dtype),
+                "rel_bias": (jax.random.normal(
+                    next(ks), ((2 * cfg.window - 1) ** 2, n_heads)) * 0.02
+                    ).astype(dtype),
+                "ln2_w": jnp.ones((dim,), dtype),
+                "ln2_b": jnp.zeros((dim,), dtype),
+                "w_up": dense_init(next(ks), dim, hid, dtype),
+                "b_up": jnp.zeros((hid,), dtype),
+                "w_down": dense_init(next(ks), hid, dim, dtype),
+                "b_down": jnp.zeros((dim,), dtype),
+            })
+        stage = {"blocks": blocks}
+        if s_i < len(cfg.depths) - 1:
+            stage["merge_ln_w"] = jnp.ones((4 * dim,), dtype)
+            stage["merge_ln_b"] = jnp.zeros((4 * dim,), dtype)
+            stage["merge_w"] = dense_init(next(ks), 4 * dim, 2 * dim, dtype)
+            dim *= 2
+        stages.append(stage)
+    params["stages"] = stages
+    params["ln_f_w"] = jnp.ones((dim,), dtype)
+    params["ln_f_b"] = jnp.zeros((dim,), dtype)
+    params["head"] = dense_init(next(ks), dim, cfg.n_classes, dtype)
+    return params
+
+
+def _window_partition(x: jax.Array, w: int) -> jax.Array:
+    b, h, wd, c = x.shape
+    x = x.reshape(b, h // w, w, wd // w, w, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(-1, w * w, c)
+
+
+def _window_reverse(xw: jax.Array, w: int, h: int, wd: int) -> jax.Array:
+    b = xw.shape[0] // ((h // w) * (wd // w))
+    x = xw.reshape(b, h // w, wd // w, w, w, -1)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h, wd, -1)
+
+
+def _region_ids(h: int, w: int, win: int, shift: int) -> np.ndarray:
+    """Region labels for shifted-window masking (standard Swin scheme)."""
+    ids = np.zeros((h, w), np.int32)
+    cnt = 0
+    for hs in (slice(0, -win), slice(-win, -shift), slice(-shift, None)):
+        for ws in (slice(0, -win), slice(-win, -shift), slice(-shift, None)):
+            ids[hs, ws] = cnt
+            cnt += 1
+    return ids
+
+
+def _wmsa(bp: Params, x: jax.Array, n_heads: int, win: int, shift: int,
+          grid_h: int, grid_w: int, rel_idx: jax.Array) -> jax.Array:
+    """Windowed MSA on (B, H, W, C) tokens."""
+    b, h, w, c = x.shape
+    dh = c // n_heads
+    if shift:
+        x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
+    xw = _window_partition(x, win)                      # (B*nW, n, C)
+    n = win * win
+    qkv = xw @ bp["w_qkv"] + bp["b_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(-1, n, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    s = jnp.einsum("whnd,whmd->whnm", q, k) * (dh ** -0.5)
+    bias = bp["rel_bias"][rel_idx]                      # (n, n, H)
+    s = s + bias.transpose(2, 0, 1)[None]
+    if shift:
+        ids = jnp.asarray(_region_ids(h, w, win, shift))
+        idw = _window_partition(ids[None, :, :, None].astype(jnp.float32),
+                                win)[..., 0].astype(jnp.int32)  # (nW, n)
+        mask = idw[:, :, None] == idw[:, None, :]       # (nW, n, n)
+        n_w = mask.shape[0]
+        mask = jnp.tile(mask, (s.shape[0] // n_w, 1, 1))
+        s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("whnm,whmd->whnd", p, v)
+    o = o.transpose(0, 2, 1, 3).reshape(-1, n, c) @ bp["w_msa"]
+    o = _window_reverse(o, win, h, w)
+    if shift:
+        o = jnp.roll(o, (shift, shift), axis=(1, 2))
+    return o
+
+
+def forward(params: Params, patches: jax.Array, cfg: SwinConfig
+            ) -> jax.Array:
+    """patches: (B, (image/patch)^2, P*P*3) -> (B, n_classes)."""
+    b = patches.shape[0]
+    side = cfg.image // cfg.patch
+    x = patches @ params["patch_embed"]
+    x = layer_norm(x, params["pe_ln_w"], params["pe_ln_b"])
+    x = x.reshape(b, side, side, cfg.embed_dim)
+    rel_idx = jnp.asarray(_rel_pos_index(cfg.window))
+
+    for s_i, stage in enumerate(params["stages"]):
+        n_heads = cfg.heads[s_i]
+        for b_i, bp in enumerate(stage["blocks"]):
+            h, w, c = x.shape[1:]
+            shift = 0 if b_i % 2 == 0 else cfg.window // 2
+            ln = layer_norm(x, bp["ln1_w"], bp["ln1_b"])
+            x = x + _wmsa(bp, ln, n_heads, cfg.window, shift, h, w, rel_idx)
+            ln = layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+            y = ops.mlp(ln.reshape(b, h * w, c), bp["w_up"], bp["w_down"],
+                        bp["b_up"], bp["b_down"], activation="gelu",
+                        backend=cfg.backend)
+            x = x + y.reshape(b, h, w, c)
+        if "merge_w" in stage:
+            h, w, c = x.shape[1:]
+            x = x.reshape(b, h // 2, 2, w // 2, 2, c)
+            x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h // 2, w // 2,
+                                                      4 * c)
+            x = layer_norm(x, stage["merge_ln_w"], stage["merge_ln_b"])
+            x = x @ stage["merge_w"]
+    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    pooled = jnp.mean(x, axis=(1, 2))
+    return pooled @ params["head"]

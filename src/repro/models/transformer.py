@@ -1,0 +1,425 @@
+"""Backbone shared by all 10 assigned architectures (+ ViT text-side).
+
+A model is a stack of ``n_layers`` blocks following a repeating ``pattern``
+of block kinds (attn | rec | mlstm | slstm).  Layers are scanned per
+*superblock* (one period of the pattern) with stacked parameters, keeping
+lowered HLO size independent of depth — essential for compiling 64-layer
+models against a 512-device mesh.
+
+Block structure (pre-norm residual):
+    x += mixer(norm(x))
+    x += mlp_or_moe(norm(x))        # skipped when d_ff == 0 (mLSTM blocks)
+
+Three entry points per model:
+    forward(params, batch, cfg)            -> logits       (training)
+    prefill(params, batch, cfg, cache_len) -> logits, caches
+    decode_step(params, tokens, caches, pos, cfg) -> logits, caches
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import recurrent, xlstm
+from .config import ModelConfig
+from .layers import (AttnConfig, MlpConfig, MoEConfig, Params, apply_norm,
+                     attn_decode, attn_forward, attn_init, attn_prefill,
+                     dense_init, embed_init, mlp_forward, mlp_init,
+                     moe_forward, moe_init, norm_init)
+
+# ---------------------------------------------------------------------------
+# Per-kind mixer dispatch
+# ---------------------------------------------------------------------------
+
+
+def _attn_cfg(cfg: ModelConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, qkv_bias=cfg.qkv_bias, window=cfg.window,
+        causal=cfg.causal, rope_theta=cfg.rope_theta, backend=cfg.backend,
+        attn_dp=cfg.attn_dp)
+
+
+def _mlp_cfg(cfg: ModelConfig) -> MlpConfig:
+    return MlpConfig(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                     activation=cfg.activation, gated=cfg.gated,
+                     bias=cfg.mlp_bias, backend=cfg.backend)
+
+
+def _moe_cfg(cfg: ModelConfig) -> MoEConfig:
+    m = cfg.moe
+    return MoEConfig(d_model=cfg.d_model, d_ff=m.d_ff, n_experts=m.n_experts,
+                     top_k=m.top_k, activation=cfg.activation,
+                     gated=cfg.gated, capacity_factor=m.capacity_factor,
+                     backend=cfg.backend, ep_virtual=cfg.moe_ep_virtual)
+
+
+def _mixer_init(kind: str, key, cfg: ModelConfig, dtype) -> Params:
+    if kind == "attn":
+        return attn_init(key, _attn_cfg(cfg), dtype)
+    if kind == "rec":
+        return recurrent.rec_init(key, cfg, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_init(key, cfg, dtype)
+    if kind == "slstm":
+        return xlstm.slstm_init(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _mixer_forward(kind: str, p, x, cfg: ModelConfig):
+    if kind == "attn":
+        return attn_forward(p, x, _attn_cfg(cfg))
+    if kind == "rec":
+        return recurrent.rec_forward(p, x, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_forward(p, x, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_forward(p, x, cfg)
+    raise ValueError(kind)
+
+
+def _mixer_prefill(kind: str, p, x, cfg: ModelConfig, cache_len: int):
+    if kind == "attn":
+        return attn_prefill(p, x, _attn_cfg(cfg), cache_len)
+    if kind == "rec":
+        return recurrent.rec_prefill(p, x, cfg, cache_len)
+    if kind == "mlstm":
+        return xlstm.mlstm_prefill(p, x, cfg, cache_len)
+    if kind == "slstm":
+        return xlstm.slstm_prefill(p, x, cfg, cache_len)
+    raise ValueError(kind)
+
+
+def _mixer_decode(kind: str, p, x, cache, pos, cfg: ModelConfig):
+    if kind == "attn":
+        return attn_decode(p, x, cache, pos, _attn_cfg(cfg))
+    if kind == "rec":
+        return recurrent.rec_decode(p, x, cache, pos, cfg)
+    if kind == "mlstm":
+        return xlstm.mlstm_decode(p, x, cache, pos, cfg)
+    if kind == "slstm":
+        return xlstm.slstm_decode(p, x, cache, pos, cfg)
+    raise ValueError(kind)
+
+
+def _mixer_init_cache(kind: str, cfg: ModelConfig, batch: int,
+                      cache_len: int, dtype):
+    if kind == "attn":
+        return {"k": jnp.zeros((batch, cfg.n_kv_heads, cache_len, cfg.hd),
+                               dtype),
+                "v": jnp.zeros((batch, cfg.n_kv_heads, cache_len, cfg.hd),
+                               dtype)}
+    if kind == "rec":
+        return recurrent.rec_init_cache(cfg, batch, cache_len, dtype)
+    if kind == "mlstm":
+        return xlstm.mlstm_init_cache(cfg, batch, cache_len, dtype)
+    if kind == "slstm":
+        return xlstm.slstm_init_cache(cfg, batch, cache_len, dtype)
+    raise ValueError(kind)
+
+
+def _has_ff(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.d_ff > 0 or cfg.moe is not None
+
+
+# ---------------------------------------------------------------------------
+# Block (mixer + FF) — operates on (B, T, D) or (B, D) for decode
+# ---------------------------------------------------------------------------
+
+
+def _block_init(kind: str, key, cfg: ModelConfig) -> Params:
+    dtype = cfg.param_dtype
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": norm_init(cfg.d_model, cfg.norm, dtype),
+                 "mixer": _mixer_init(kind, ks[0], cfg, dtype)}
+    if _has_ff(cfg, kind):
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        if cfg.moe is not None:
+            p["moe"] = moe_init(ks[1], _moe_cfg(cfg), dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], _mlp_cfg(cfg), dtype)
+    return p
+
+
+def _block_ff(p: Params, x: jax.Array, cfg: ModelConfig,
+              collect_aux: bool = False):
+    h = apply_norm(x, p["norm2"], _norm_kind(cfg))
+    aux = jnp.asarray(0.0, jnp.float32)
+    if cfg.moe is not None:
+        mcfg = _moe_cfg(cfg)
+        squeeze = h.ndim == 2
+        if squeeze:
+            # Decode: make routing dropless (capacity covers the worst case)
+            # so serving never silently drops tokens.
+            import dataclasses as _dc
+            mcfg = _dc.replace(mcfg,
+                               capacity_factor=mcfg.n_experts / mcfg.top_k)
+            h = h[:, None]
+        if collect_aux:
+            y, aux = moe_forward(p["moe"], h, mcfg, return_aux=True)
+        else:
+            y = moe_forward(p["moe"], h, mcfg)
+        y = y[:, 0] if squeeze else y
+    else:
+        y = mlp_forward(p["mlp"], h, _mlp_cfg(cfg))
+    return (y, aux) if collect_aux else y
+
+
+def _pin_replicated(y: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if not cfg.bf16_reduce:
+        return y
+    from .layers import clamp_cotangent
+    return clamp_cotangent(y)
+
+
+def _norm_kind(cfg: ModelConfig) -> str:
+    if cfg.norm == "rms" and cfg.bf16_reduce:
+        return "rms_mp"
+    return cfg.norm
+
+
+def _block_forward(kind: str, p: Params, x: jax.Array,
+                   cfg: ModelConfig, collect_aux: bool = False):
+    x = x + _pin_replicated(
+        _mixer_forward(kind, p["mixer"],
+                       apply_norm(x, p["norm1"], _norm_kind(cfg)), cfg),
+        cfg)
+    aux = jnp.asarray(0.0, jnp.float32)
+    if _has_ff(cfg, kind):
+        if collect_aux:
+            y, aux = _block_ff(p, x, cfg, collect_aux=True)
+        else:
+            y = _block_ff(p, x, cfg)
+        x = x + _pin_replicated(y, cfg)
+    if cfg.seq_shard and x.ndim == 3:
+        # megatron-SP: residual stream sharded (batch over dp, seq over
+        # model) between blocks; GSPMD converts the block-boundary TP
+        # all-reduce into reduce-scatter + all-gather (half the wire bytes)
+        from .layers import _shard_hint
+        x = _shard_hint(x, (("pod", "data"), "model", None))
+    if cfg.block_barrier:
+        x = jax.lax.optimization_barrier(x)
+    return (x, aux) if collect_aux else x
+
+
+def _block_prefill(kind: str, p: Params, x: jax.Array, cfg: ModelConfig,
+                   cache_len: int):
+    y, cache = _mixer_prefill(kind, p["mixer"],
+                              apply_norm(x, p["norm1"], cfg.norm), cfg,
+                              cache_len)
+    x = x + y
+    if _has_ff(cfg, kind):
+        x = x + _block_ff(p, x, cfg)
+    return x, cache
+
+
+def _block_decode(kind: str, p: Params, x: jax.Array, cache, pos,
+                  cfg: ModelConfig):
+    y, cache = _mixer_decode(kind, p["mixer"],
+                             apply_norm(x, p["norm1"], cfg.norm), cache,
+                             pos, cfg)
+    x = x + y
+    if _has_ff(cfg, kind):
+        x = x + _block_ff(p, x, cfg)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.param_dtype
+    keys = jax.random.split(key, 4 + len(cfg.pattern))
+    params: Params = {}
+    if cfg.input_mode in ("tokens", "tokens+image"):
+        params["embed"] = embed_init(keys[0], cfg.padded_vocab, cfg.d_model,
+                                     dtype)
+    elif cfg.embed_dim_in and cfg.embed_dim_in != cfg.d_model:
+        params["in_proj"] = dense_init(keys[0], cfg.embed_dim_in,
+                                       cfg.d_model, dtype)
+    # one stacked param tree per pattern position
+    layers: List[Params] = []
+    for pos, kind in enumerate(cfg.pattern):
+        sub = jax.random.split(keys[1 + pos], cfg.n_superblocks)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[_block_init(kind, k, cfg) for k in sub])
+        layers.append(stacked)
+    params["layers"] = tuple(layers)
+    params["final_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[-1], cfg.d_model,
+                                       cfg.padded_vocab, dtype)
+    return params
+
+
+def embed_batch(params: Params, batch: Dict[str, jax.Array],
+                cfg: ModelConfig) -> jax.Array:
+    """Token / stub-frontend embedding -> (B, S, D)."""
+    if cfg.input_mode == "tokens":
+        return params["embed"][batch["tokens"]]
+    if cfg.input_mode == "tokens+image":
+        tok = params["embed"][batch["tokens"]]           # (B, S_text, D)
+        img = batch["patch_embeds"].astype(tok.dtype)    # (B, S_img, D)
+        return jnp.concatenate([img, tok], axis=1)
+    # embeds: precomputed frame/patch features (audio/vision stubs)
+    x = batch["embeds"]
+    if "in_proj" in params:
+        x = x @ params["in_proj"]
+    return x.astype(cfg.param_dtype)
+
+
+def unembed(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["unembed"]
+
+
+def _scan_superblocks(params: Params, x: jax.Array, cfg: ModelConfig,
+                      body) -> Tuple[jax.Array, Any]:
+    """Scan ``body(x, layer_slice) -> (x, y)`` over stacked superblocks."""
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll:
+        return _unrolled_scan(body, x, params["layers"], cfg.n_superblocks)
+    return jax.lax.scan(body, x, params["layers"])
+
+
+def _unrolled_scan(body, x, xs, n: int):
+    """Python-loop equivalent of lax.scan (dry-run exactness: XLA's
+    cost_analysis ignores while-loop trip counts, unrolling makes the
+    roofline terms exact)."""
+    ys = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], xs)
+        x, y = body(x, sl)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return x, ys
+
+
+def forward(params: Params, batch: Dict[str, jax.Array],
+            cfg: ModelConfig, return_aux: bool = False):
+    """Logits (and, with return_aux, the summed MoE load-balance loss —
+    collected in the same pass, no re-forward)."""
+    x = embed_batch(params, batch, cfg)
+
+    def body(x, layer):
+        aux = jnp.asarray(0.0, jnp.float32)
+        for pos, kind in enumerate(cfg.pattern):
+            if return_aux:
+                x, a = _block_forward(kind, layer[pos], x, cfg,
+                                      collect_aux=True)
+                aux += a
+            else:
+                x = _block_forward(kind, layer[pos], x, cfg)
+        return x, aux
+
+    x, aux = _scan_superblocks(params, x, cfg, body)
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    logits = unembed(params, x, cfg)
+    if return_aux:
+        return logits, jnp.sum(aux)
+    return logits
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            aux_weight: float = 0.01) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Cross-entropy next-token/masked-prediction loss (+ MoE aux)."""
+    if cfg.moe is not None:
+        logits, aux = forward(params, batch, cfg, return_aux=True)
+    else:
+        logits = forward(params, batch, cfg)
+    labels = batch["labels"]
+    # align: for tokens+image mode, logits cover [image, text]; labels are
+    # text-only -> take the trailing text positions.
+    if cfg.input_mode == "tokens+image":
+        logits = logits[:, cfg.n_image_tokens:]
+    logits = logits[..., :cfg.vocab].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    metrics = {"ce_loss": loss}
+    if cfg.moe is not None:
+        metrics["moe_aux"] = aux
+        loss = loss + aux_weight * aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Inference: prefill + decode with stacked caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int) -> Tuple:
+    """Stacked (n_superblocks leading dim) cache per pattern position."""
+    dtype = cfg.param_dtype
+    caches = []
+    for kind in cfg.pattern:
+        one = _mixer_init_cache(kind, cfg, batch, cfg.kv_cache_len(cache_len),
+                                dtype)
+        caches.append(jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_superblocks,) + x.shape).copy(), one))
+    return tuple(caches)
+
+
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            cache_len: int) -> Tuple[jax.Array, Tuple]:
+    """Run the prompt, return final-position logits + caches."""
+    x = embed_batch(params, batch, cfg)
+    eff_len = cfg.kv_cache_len(cache_len)
+
+    def body(x, layer):
+        caches = []
+        for pos, kind in enumerate(cfg.pattern):
+            x, c = _block_prefill(kind, layer[pos], x, cfg, eff_len)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, caches = _scan_superblocks(params, x, cfg, body)
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return unembed(params, x[:, -1:], cfg), caches
+
+
+def decode_step(params: Params, tokens: jax.Array, caches: Tuple,
+                pos: jax.Array, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Tuple]:
+    """tokens: (B,) int32; pos: (B,) absolute positions.  One step."""
+    x = params["embed"][tokens] if cfg.input_mode != "embeds" else tokens
+
+    def body(x, inputs):
+        layer, cache = inputs
+        new_caches = []
+        for p_i, kind in enumerate(cfg.pattern):
+            x, c = _block_decode(kind, layer[p_i], x, cache[p_i], pos, cfg)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.unroll:
+        x, new_caches = _unrolled_scan(body_fn, x,
+                                       (params["layers"], caches),
+                                       cfg.n_superblocks)
+    else:
+        x, new_caches = jax.lax.scan(body_fn, x, (params["layers"], caches))
+    x = apply_norm(x, params["final_norm"], cfg.norm)
+    return unembed(params, x, cfg), new_caches
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))

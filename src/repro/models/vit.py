@@ -1,0 +1,231 @@
+"""Vision transformers (ViT / DeiT / Swin-T) — the paper's target models.
+
+The execution structure mirrors ViTA's dataflow:
+  * MSA runs through `ops.vita_msa` — the paper-faithful fused per-head
+    kernel (one head's intermediates at a time, head-level pipeline);
+  * MLP runs through `ops.mlp` — the inter-layer optimization (hidden layer
+    never materialized);
+  * the quantized path (`forward` with QTensor params + frozen activation
+    scales) reproduces the int8 PTQ inference mode of Sec. III-A.
+
+The patch-embedding frontend operates on pre-extracted patch pixel vectors
+(B, N, P*P*3) — patchification is a reshape, done host-side by the data
+pipeline.  Swin-T adds windowed/shifted MSA, relative position bias and
+patch merging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (QTensor, amax_scale, quantize_per_channel,
+                              INT8_MAX)
+from repro.kernels import ops
+from .layers import Params, dense_init, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    image: int = 256
+    patch: int = 16
+    dim: int = 768
+    heads: int = 12
+    layers: int = 12
+    mlp_ratio: float = 4.0
+    n_classes: int = 1000
+    backend: Optional[str] = None
+    dtype: str = "float32"
+
+    @property
+    def tokens(self) -> int:
+        return (self.image // self.patch) ** 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def mlp_hidden(self) -> int:
+        return int(self.dim * self.mlp_ratio)
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+
+def vit_b16(image: int = 256, **kw) -> ViTConfig:
+    return ViTConfig(name=f"vit_b16_{image}", image=image, **kw)
+
+
+def deit_s(**kw) -> ViTConfig:
+    return ViTConfig(name="deit_s_224", image=224, dim=384, heads=6, **kw)
+
+
+def deit_t(**kw) -> ViTConfig:
+    return ViTConfig(name="deit_t_224", image=224, dim=192, heads=3, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ViTConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    n_k = 6 * cfg.layers + 3
+    ks = jax.random.split(key, n_k)
+    it = iter(range(n_k))
+    params: Params = {
+        "patch_embed": dense_init(ks[next(it)], cfg.patch_dim, cfg.dim,
+                                  dtype),
+        "pos_embed": (jax.random.normal(ks[next(it)],
+                                        (cfg.tokens, cfg.dim)) * 0.02
+                      ).astype(dtype),
+    }
+    layers = []
+    for _ in range(cfg.layers):
+        lp = {
+            "ln1_w": jnp.ones((cfg.dim,), dtype),
+            "ln1_b": jnp.zeros((cfg.dim,), dtype),
+            # per-head weights (H, D, Dh) — the vita_msa layout
+            "wq": jnp.stack([dense_init(k, cfg.dim, cfg.head_dim, dtype)
+                             for k in jax.random.split(ks[next(it)],
+                                                       cfg.heads)]),
+            "wk": jnp.stack([dense_init(k, cfg.dim, cfg.head_dim, dtype)
+                             for k in jax.random.split(ks[next(it)],
+                                                       cfg.heads)]),
+            "wv": jnp.stack([dense_init(k, cfg.dim, cfg.head_dim, dtype)
+                             for k in jax.random.split(ks[next(it)],
+                                                       cfg.heads)]),
+            "w_msa": dense_init(ks[next(it)], cfg.dim, cfg.dim, dtype),
+            "ln2_w": jnp.ones((cfg.dim,), dtype),
+            "ln2_b": jnp.zeros((cfg.dim,), dtype),
+            "w_up": dense_init(ks[next(it)], cfg.dim, cfg.mlp_hidden, dtype),
+            "b_up": jnp.zeros((cfg.mlp_hidden,), dtype),
+            "w_down": dense_init(ks[next(it)], cfg.mlp_hidden, cfg.dim,
+                                 dtype),
+            "b_down": jnp.zeros((cfg.dim,), dtype),
+        }
+        layers.append(lp)
+    params["layers"] = layers
+    params["ln_f_w"] = jnp.ones((cfg.dim,), dtype)
+    params["ln_f_b"] = jnp.zeros((cfg.dim,), dtype)
+    params["head"] = dense_init(ks[next(it)], cfg.dim, cfg.n_classes, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Float forward (ops-dispatched: vita_msa + fused mlp)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_q_matmul(x, w, obs, name):
+    """matmul with optional int8 quantization (w: array or QTensor)."""
+    if isinstance(w, QTensor):
+        scale = obs.observe(name, x)
+        xq = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX
+                      ).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            xq, w.values, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * (scale * w.scale)
+    return x @ w
+
+
+def forward(params: Params, patches: jax.Array, cfg: ViTConfig,
+            observer=None) -> jax.Array:
+    """patches: (B, N, P*P*3) -> class logits (B, n_classes).
+
+    With QTensor weights + an observer (core.quant.Calibrator) this runs the
+    int8 PTQ inference path; with float weights it runs through the ViTA
+    Pallas ops.
+    """
+    obs = observer
+    quantized = isinstance(params["patch_embed"], QTensor)
+    b, n, _ = patches.shape
+    x = _maybe_q_matmul(patches, params["patch_embed"], obs, "patch_embed")
+    x = x + (params["pos_embed"].dequantize()
+             if isinstance(params["pos_embed"], QTensor)
+             else params["pos_embed"])[None]
+
+    for i, lp in enumerate(params["layers"]):
+        h = layer_norm(x, lp["ln1_w"], lp["ln1_b"])
+        if quantized:
+            sa = _quant_msa(lp, h, cfg, obs, i)
+        else:
+            sa = jax.vmap(lambda hb: ops.vita_msa(
+                hb, lp["wq"], lp["wk"], lp["wv"], backend=cfg.backend))(h)
+            sa = sa.transpose(0, 2, 1, 3).reshape(b, n, cfg.dim)
+        x = x + _maybe_q_matmul(sa, lp["w_msa"], obs, f"l{i}.w_msa")
+        h = layer_norm(x, lp["ln2_w"], lp["ln2_b"])
+        if quantized:
+            hid = jax.nn.gelu(_maybe_q_matmul(h, lp["w_up"], obs,
+                                              f"l{i}.w_up") + lp["b_up"])
+            y = _maybe_q_matmul(hid, lp["w_down"], obs,
+                                f"l{i}.w_down") + lp["b_down"]
+        else:
+            y = ops.mlp(h, lp["w_up"], lp["w_down"], lp["b_up"],
+                        lp["b_down"], activation="gelu",
+                        backend=cfg.backend)
+        x = x + y
+    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    pooled = jnp.mean(x, axis=1)
+    return _maybe_q_matmul(pooled, params["head"], obs, "head")
+
+
+def _quant_msa(lp, h, cfg: ViTConfig, obs, i: int) -> jax.Array:
+    """int8 per-head MSA: Q/K/V projections in int8, attention in fp32
+    (softmax stays high precision, as in ViTA's dedicated softmax unit)."""
+    b, n, d = h.shape
+    scale = obs.observe(f"l{i}.qkv_in", h)
+    hq = jnp.clip(jnp.round(h / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+    def proj(wq: QTensor, name):
+        acc = jnp.einsum("bnd,hde->bhne", hq.astype(jnp.int32),
+                         wq.values.astype(jnp.int32))
+        # per-(head, out-channel) weight scale: (H, 1, Dh) -> (1, H, 1, Dh)
+        ws = wq.scale[None] if wq.scale.ndim == 3 else wq.scale
+        return acc.astype(jnp.float32) * (scale * ws)
+
+    q = proj(lp["wq"], "wq")
+    k = proj(lp["wk"], "wk")
+    v = proj(lp["wv"], "wv")
+    s = jnp.einsum("bhne,bhme->bhnm", q, k) * (cfg.head_dim ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    sa = jnp.einsum("bhnm,bhme->bhne", p, v)
+    return sa.transpose(0, 2, 1, 3).reshape(b, n, d)
+
+
+def quantize_vit(params: Params) -> Params:
+    """Per-channel int8 PTQ of all ViT weights (biases/norms stay float)."""
+    out: Params = {}
+    for k, v in params.items():
+        if k == "layers":
+            def _q(kk, vv):
+                if kk in ("wq", "wk", "wv"):
+                    # per-(head, out-channel): reduce over D only
+                    from repro.core.quant import quantize
+                    return quantize(vv, amax_scale(vv, axis=(1,)))
+                if kk in ("w_msa", "w_up", "w_down"):
+                    return quantize_per_channel(vv)
+                return vv
+            out[k] = [{kk: _q(kk, vv) for kk, vv in lp.items()} for lp in v]
+        elif k in ("patch_embed", "head"):
+            out[k] = quantize_per_channel(v)
+        else:
+            out[k] = v
+    return out
+
+
+def extract_patches(images: jax.Array, patch: int) -> jax.Array:
+    """(B, H, W, 3) -> (B, N, P*P*3) patch pixel vectors."""
+    b, h, w, c = images.shape
+    gh, gw = h // patch, w // patch
+    x = images.reshape(b, gh, patch, gw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, gh * gw, patch * patch * c)

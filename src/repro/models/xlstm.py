@@ -1,0 +1,287 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM (Beck et al., arXiv:2405.04517): exponential input/forget gating over
+a matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T.  Training/prefill uses
+the stabilized *parallel* (quadratic, attention-like) form; decode uses the
+O(1) recurrent form.  Parallel == recurrent equivalence is property-tested.
+
+sLSTM keeps a scalar memory with hidden-to-hidden recurrence (block-diagonal
+per head), which forbids parallelization -> lax.scan over time.
+
+ViTA-applicability (DESIGN.md §Arch-applicability): these mixers are
+attention-free, so the head-streamed attention kernel does not apply; the
+block up/down projections still use the fused-MLP treatment, and the
+parallel mLSTM form reuses the same never-materialize streaming structure
+as flash attention (the (T,T) decay matrix is block-streamed on TPU).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, dense_init, rms_norm
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model          # proj_factor 2 (xLSTM-1.3b)
+    h = cfg.n_heads
+    return d_inner, h, d_inner // h
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_inner, h, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    def blockdiag(k):
+        # per-head (block-diagonal) projection, as in the xLSTM paper
+        return jnp.stack([dense_init(ki, dh, dh, dtype)
+                          for ki in jax.random.split(k, h)])
+
+    return {
+        "w_up": dense_init(ks[0], d, d_inner, dtype),
+        "w_z": dense_init(ks[1], d, d_inner, dtype),     # output gate branch
+        "w_q": blockdiag(ks[2]),
+        "w_k": blockdiag(ks[3]),
+        "w_v": blockdiag(ks[4]),
+        "w_if": dense_init(ks[5], d_inner, 2 * h, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)),
+                                 jnp.linspace(3.0, 6.0, h)]),  # f-gate bias
+        "gn_w": jnp.zeros((d_inner,), dtype),             # per-head groupnorm
+        "w_down": dense_init(ks[6], d_inner, d, dtype),
+    }
+
+
+def _mlstm_qkvif(p: Params, u: jax.Array, h: int):
+    """u: (B,T,Di) -> q,k,v (B,H,T,dh), log_i/log_f (B,H,T) in fp32."""
+    b, t, di = u.shape
+    dh = di // h
+    uh = u.reshape(b, t, h, dh)
+
+    def proj(w):   # block-diagonal per-head projection
+        return jnp.einsum("bthd,hde->bhte", uh, w)
+
+    q = proj(p["w_q"])
+    k = proj(p["w_k"]) * (dh ** -0.5)
+    v = proj(p["w_v"])
+    gates = (u.astype(jnp.float32) @ p["w_if"] + p["b_if"])  # (B,T,2H)
+    log_i = gates[..., :h].transpose(0, 2, 1)                # (B,H,T)
+    log_f = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel mLSTM.  q,k,v: (B,H,T,dh); gates: (B,H,T)."""
+    b, h, t, dh = q.shape
+    fc = jnp.cumsum(log_f, axis=-1)                          # inclusive
+    # D_ts = fc_t - fc_s + log_i_s   (s <= t)
+    dmat = fc[..., :, None] - fc[..., None, :] + log_i[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    dmat = jnp.where(mask[None, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1)                               # (B,H,T)
+    w = jnp.exp(dmat - m[..., None])                         # (B,H,T,T)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    cw = w * s
+    numer = jnp.einsum("bhts,bhsd->bhtd", cw, v.astype(jnp.float32))
+    denom = jnp.abs(jnp.sum(cw, axis=-1))                    # (B,H,T)
+    denom = jnp.maximum(denom, jnp.exp(-m))
+    return numer / denom[..., None], m
+
+
+def _mlstm_recurrent_step(state, q, k, v, log_i, log_f):
+    """One decode step.  state: (C (B,H,dh,dh), n (B,H,dh), m (B,H));
+    q,k,v: (B,H,dh); log_i/log_f: (B,H)."""
+    C, n, m = state
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    m_new = jnp.maximum(log_f + m, log_i)
+    f_s = jnp.exp(log_f + m - m_new)
+    i_s = jnp.exp(log_i - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * \
+        jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    n = f_s[..., None] * n + i_s[..., None] * kf
+    h_num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                        jnp.exp(-m_new))
+    return (C, n, m_new), h_num / h_den[..., None]
+
+
+def _headnorm(y: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMS-norm each head's dh-slice.  y: (..., H, dh); w: (H*dh,)."""
+    shp = y.shape
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    yn = y * jax.lax.rsqrt(var + eps)
+    return yn.reshape(*shp[:-2], -1) * (1.0 + w.astype(y.dtype))
+
+
+def mlstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  positions=None) -> jax.Array:
+    b, t, d = x.shape
+    _, h, dh = _dims(cfg)
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, u, h)
+    h_attn, _ = _mlstm_parallel(q, k, v, log_i, log_f)       # (B,H,T,dh) f32
+    y = h_attn.transpose(0, 2, 1, 3)                         # (B,T,H,dh)
+    y = _headnorm(y, p["gn_w"])                              # (B,T,Di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_down"]
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype) -> Dict[str, jax.Array]:
+    _, h, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_prefill(p: Params, x: jax.Array, cfg: ModelConfig, cache_len: int
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill by scanning the recurrent form (exact state at the end)."""
+    b, t, d = x.shape
+    _, h, dh = _dims(cfg)
+    u = x @ p["w_up"]
+    z = x @ p["w_z"]
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, u, h)
+    state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+             jnp.zeros((b, h, dh), jnp.float32),
+             jnp.full((b, h), -1e30, jnp.float32))
+
+    def step(st, inputs):
+        qt, kt, vt, li, lf = inputs
+        st, ht = _mlstm_recurrent_step(st, qt, kt, vt, li, lf)
+        return st, ht
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), log_i.transpose(2, 0, 1),
+          log_f.transpose(2, 0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    h_attn = hs.transpose(1, 2, 0, 3)                        # (B,H,T,dh)
+    y = _headnorm(h_attn.transpose(0, 2, 1, 3), p["gn_w"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_down"]
+    return out, {"C": state[0], "n": state[1], "m": state[2]}
+
+
+def mlstm_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 pos, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, d = x.shape
+    _, h, dh = _dims(cfg)
+    u = (x @ p["w_up"])[:, None]
+    z = x @ p["w_z"]
+    q, k, v, log_i, log_f = _mlstm_qkvif(p, u, h)
+    state = (cache["C"], cache["n"], cache["m"])
+    state, ht = _mlstm_recurrent_step(
+        state, q[:, :, 0], k[:, :, 0], v[:, :, 0],
+        log_i[:, :, 0], log_f[:, :, 0])                      # ht: (B,H,dh)
+    y = _headnorm(ht, p["gn_w"])                             # (B, Di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_down"], {"C": state[0], "n": state[1], "m": state[2]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for i,f,z,o stacked: (D, 4D)
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),
+        "b_in": jnp.zeros((4 * d,), jnp.float32)
+        .at[d:2 * d].set(1.0),                               # f-gate bias
+        # block-diagonal (per-head) hidden-to-hidden recurrence
+        "r": (jax.random.normal(ks[1], (4, h, dh, dh)) / math.sqrt(dh)
+              ).astype(jnp.float32),
+        "gn_w": jnp.zeros((d,), dtype),
+    }
+
+
+def _slstm_scan(p: Params, x: jax.Array, cfg: ModelConfig,
+                state: Tuple) -> Tuple[jax.Array, Tuple]:
+    """x: (B,T,D).  state: (c,n,h,m) each (B,D) fp32."""
+    b, t, d = x.shape
+    hh = cfg.n_heads
+    dh = d // hh
+    pre_all = (x @ p["w_in"]).astype(jnp.float32) + p["b_in"]  # (B,T,4D)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        hh_heads = h.reshape(b, hh, dh)
+        rec = jnp.einsum("ghkl,bhk->gbhl", p["r"], hh_heads)  # (4,B,H,dh)
+        rec = rec.reshape(4, b, d)
+        zi = pre_t[:, 0 * d:1 * d] + rec[0]
+        zf = pre_t[:, 1 * d:2 * d] + rec[1]
+        zz = pre_t[:, 2 * d:3 * d] + rec[2]
+        zo = pre_t[:, 3 * d:4 * d] + rec[3]
+        log_i = zi
+        log_f = jax.nn.log_sigmoid(zf)
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_s = jnp.exp(log_i - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(zz)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre_all, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  positions=None) -> jax.Array:
+    b, t, d = x.shape
+    state = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + \
+        (jnp.full((b, d), -1e30, jnp.float32),)
+    hs, _ = _slstm_scan(p, x, cfg, state)
+    y = _headnorm(hs.reshape(b, t, cfg.n_heads, d // cfg.n_heads),
+                  p["gn_w"])
+    return y.astype(x.dtype)
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def slstm_prefill(p: Params, x: jax.Array, cfg: ModelConfig, cache_len: int
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, t, d = x.shape
+    state = (jnp.zeros((b, d), jnp.float32),) * 3 + \
+        (jnp.full((b, d), -1e30, jnp.float32),)
+    hs, state = _slstm_scan(p, x, cfg, state)
+    y = _headnorm(hs.reshape(b, t, cfg.n_heads, d // cfg.n_heads), p["gn_w"])
+    return y.astype(x.dtype), {"c": state[0], "n": state[1],
+                               "h": state[2], "m": state[3]}
+
+
+def slstm_decode(p: Params, x: jax.Array, cache: Dict[str, jax.Array],
+                 pos, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, d = x.shape
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    hs, state = _slstm_scan(p, x[:, None], cfg, state)
+    y = _headnorm(hs.reshape(b, 1, cfg.n_heads, d // cfg.n_heads), p["gn_w"])
+    return y[:, 0].astype(x.dtype), {"c": state[0], "n": state[1],
+                                     "h": state[2], "m": state[3]}

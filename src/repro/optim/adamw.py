@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Functional: state is a pytree mirroring params (m, v in fp32 regardless of
+param dtype — mixed-precision training keeps bf16 params + fp32 moments).
+Supports ZeRO-1-style sharded optimizer state simply by sharding the state
+tree with the same PartitionSpecs as the params (distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params: Any) -> Any:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads
+    ), gnorm
+
+
+def adamw_update(grads: Any, state: Any, params: Any, lr: jax.Array,
+                 cfg: AdamWConfig = AdamWConfig()) -> Tuple[Any, Any]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mh = m_new / b1c
+        vh = v_new / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:   # decay matrices only (standard practice)
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    return new_params, new_state, {"grad_norm": gnorm}

@@ -1,0 +1,56 @@
+"""int8 gradient compression with error feedback (distributed-opt trick).
+
+At 1000+ node scale the cross-pod gradient all-reduce crosses the slow DCN
+links; compressing gradients to int8 cuts that traffic 4x (bf16) / 2x (fp8-less
+stacks).  Error feedback (residual accumulation) keeps SGD/Adam convergence:
+
+    e_t      <- residual from last step
+    c_t      = Q(g_t + e_t)            # per-tensor symmetric int8
+    e_{t+1}  = (g_t + e_t) - deQ(c_t)
+
+The compressed representative is what would cross the network; the training
+loop applies `ef_compress_grads` before the optimizer so the optimizer sees
+exactly what a receiver would decode (convergence-tested in tests/).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CompressionState = Any   # pytree of fp32 residuals
+
+
+def ef_init(params: Any) -> CompressionState:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_grads(grads: Any, residuals: CompressionState
+                      ) -> Tuple[Any, CompressionState]:
+    """Returns (decoded grads as seen after the compressed all-reduce,
+    new residuals)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        decoded = decompress_int8(q, s)
+        return decoded.astype(g.dtype), corrected - decoded
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(residuals)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,6 @@
+"""Pytest config: mark registration. NOTE: do not set
+xla_force_host_platform_device_count here — tests must see 1 device."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

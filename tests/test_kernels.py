@@ -1,0 +1,231 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fused_mlp import fused_mlp
+from repro.kernels.head_attention import decode_attention, flash_attention
+from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.vita_msa import vita_msa
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# fused MLP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,m,bn,bh", [
+    (128, 64, 256, 64, 64),
+    (256, 128, 512, 128, 256),
+    (64, 96, 192, 64, 192),          # non-128-aligned d
+])
+@pytest.mark.parametrize("act,gated,bias", [
+    ("gelu", False, True),
+    ("silu", True, False),
+    ("relu2", False, False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_mlp(n, d, m, bn, bh, act, gated, bias, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = rand(ks[0], (n, d), dtype, 0.5)
+    w1 = rand(ks[1], (d, m), dtype, 0.05)
+    w2 = rand(ks[2], (m, d), dtype, 0.05)
+    b1 = rand(ks[3], (m,), dtype, 0.1) if bias else None
+    b2 = rand(ks[4], (d,), dtype, 0.1) if bias else None
+    wg = rand(ks[5], (d, m), dtype, 0.05) if gated else None
+    out = fused_mlp(x, w1, w2, b1, b2, wg, activation=act,
+                    block_n=bn, block_h=bh, interpret=True)
+    expect = ref.fused_mlp_ref(x, w1, b1, w2, b2, activation=act, w_gate=wg)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 10)
+
+
+def test_fused_mlp_batched_leading_dims():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = rand(ks[0], (2, 64, 32))
+    w1 = rand(ks[1], (32, 128), scale=0.1)
+    w2 = rand(ks[2], (128, 32), scale=0.1)
+    out = fused_mlp(x, w1, w2, block_n=64, block_h=64, interpret=True)
+    expect = ref.fused_mlp_ref(x, w1, None, w2, None)
+    assert out.shape == (2, 64, 32)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (4, 1)])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 48)])
+def test_flash_attention(hq, hkv, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, n, dh = 2, 128, 32
+    q = rand(ks[0], (b, hq, n, dh))
+    k = rand(ks[1], (b, hkv, n, dh))
+    v = rand(ks[2], (b, hkv, n, dh))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (1, 2, 64, 64), dtype)
+    k = rand(ks[1], (1, 2, 64, 64), dtype)
+    v = rand(ks[2], (1, 2, 64, 64), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               expect.astype(jnp.float32),
+                               rtol=TOL[dtype], atol=TOL[dtype] * 5)
+
+
+def test_flash_attention_q_offset_decode_suffix():
+    """Attention over a suffix with q_offset == causal over the prefix."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    b, h, n, dh = 1, 2, 128, 32
+    q = rand(ks[0], (b, h, n, dh))
+    k = rand(ks[1], (b, h, n, dh))
+    v = rand(ks[2], (b, h, n, dh))
+    full = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    tail = flash_attention(q[:, :, 96:], k, v, q_offset=96,
+                           block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(tail, full[:, :, 96:], rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_masked_ref():
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    b, hq, hkv, s, dh = 3, 8, 2, 256, 64
+    q = rand(ks[0], (b, hq, dh))
+    kc = rand(ks[1], (b, hkv, s, dh))
+    vc = rand(ks[2], (b, hkv, s, dh))
+    lens = jnp.array([100, 256, 7])
+    out = decode_attention(q, kc, vc, lens, block_k=64, interpret=True)
+    for i in range(b):
+        li = int(lens[i])
+        expect = ref.attention_ref(q[i:i + 1, :, None], kc[i:i + 1, :, :li],
+                                   vc[i:i + 1, :, :li], causal=False)
+        np.testing.assert_allclose(out[i], expect[0, :, 0],
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 256, 128, 64, 64, 128),
+    (64, 64, 64, 64, 64, 64),
+    (256, 512, 384, 128, 128, 256),
+])
+def test_int8_matmul_exact(m, k, n, bm, bn, bk):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    xq = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    out = int8_matmul(xq, wq, block_m=bm, block_n=bn, block_k=bk,
+                      interpret=True)
+    expect = ref.int8_matmul_ref(xq, wq)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(out, expect)   # int math: exact
+
+
+def test_int8_matmul_fused_rescale():
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    m, k, n = 128, 128, 128
+    xq = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    xs = jnp.asarray(0.013)
+    ws = jax.random.uniform(ks[2], (n,)) * 0.05
+    out = int8_matmul(xq, wq, xs, ws, block_m=64, block_n=64, block_k=64,
+                      interpret=True)
+    expect = ref.int8_matmul_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(out, expect, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# vita_msa (paper-faithful per-head fused MSA)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,h,dh", [(64, 96, 3, 32), (256, 768, 12, 64),
+                                      (49, 96, 3, 32)])
+def test_vita_msa(n, d, h, dh):
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    z = rand(ks[0], (n, d), scale=0.3)
+    wq = rand(ks[1], (h, d, dh), scale=0.05)
+    wk = rand(ks[2], (h, d, dh), scale=0.05)
+    wv = rand(ks[3], (h, d, dh), scale=0.05)
+    out = vita_msa(z, wq, wk, wv, interpret=True)
+    expect = ref.vita_msa_ref(z, wq, wk, wv)
+    assert out.shape == (h, n, dh)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_vita_msa_head_independence():
+    """Each head's output depends only on its own weight slice — the
+    head-level pipeline invariant that lets ViTA stage one head at a time."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    n, d, h, dh = 32, 48, 4, 12
+    z = rand(ks[0], (n, d), scale=0.3)
+    wq = rand(ks[1], (h, d, dh), scale=0.1)
+    wk = rand(ks[2], (h, d, dh), scale=0.1)
+    wv = rand(ks[3], (h, d, dh), scale=0.1)
+    base = np.asarray(vita_msa(z, wq, wk, wv, interpret=True))
+    wq2 = wq.at[2].set(0.0)   # clobber head 2 only
+    out = np.asarray(vita_msa(z, wq2, wk, wv, interpret=True))
+    np.testing.assert_allclose(out[[0, 1, 3]], base[[0, 1, 3]],
+                               rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out[2], base[2])
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU chunked scan kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t,chunk", [(32, 8), (64, 64), (48, 16), (96, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan_kernel(t, chunk, dtype):
+    from repro.kernels.rglru_scan import rglru_scan
+    b, w = 2, 24
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    a = jax.random.uniform(ks[0], (b, t, w), jnp.float32,
+                           0.7, 0.99).astype(dtype)
+    x = (jax.random.normal(ks[1], (b, t, w)) * 0.1).astype(dtype)
+    out = rglru_scan(a, x, chunk=chunk, interpret=True)
+    h = jnp.zeros((b, w), jnp.float32)
+    outs = []
+    for i in range(t):
+        h = a[:, i].astype(jnp.float32) * h + x[:, i].astype(jnp.float32)
+        outs.append(h)
+    expect = jnp.stack(outs, 1)
+    np.testing.assert_allclose(out.astype(jnp.float32), expect,
+                               rtol=TOL[dtype], atol=TOL[dtype] * 5)
+
+
+def test_linear_recurrence_backends_agree():
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    a = jax.random.uniform(ks[0], (2, 40, 8), minval=0.5, maxval=0.99)
+    b = jax.random.normal(ks[1], (2, 40, 8)) * 0.1
+    np.testing.assert_allclose(
+        ops.linear_recurrence(a, b, backend="pallas"),
+        ops.linear_recurrence(a, b, backend="xla"),
+        rtol=2e-5, atol=2e-5)

@@ -1,0 +1,99 @@
+"""ViTA analytical model vs the paper's own tables (III, IV, V)."""
+
+import pytest
+
+from repro.core import perfmodel as pm
+
+
+@pytest.mark.parametrize("name", list(pm.PAPER_TABLE3))
+def test_table3_mac_fractions(name):
+    """Table III MAC fractions.  ViT/DeiT rows match to 0.2pp; Swin to
+    2.5pp (window-padding / counting-convention ambiguity, documented in
+    EXPERIMENTS.md)."""
+    spec = pm.PAPER_MODELS[name]
+    f = pm.count_macs(spec).fractions()
+    msa_ref, mlp_ref, pm_ref = pm.PAPER_TABLE3[name]
+    tol = 2.5 if name.startswith("swin") else 0.2
+    assert abs(f["msa"] * 100 - msa_ref) < tol, (f, msa_ref)
+    assert abs(f["mlp"] * 100 - mlp_ref) < tol
+    assert abs(f["patch_merging"] * 100 - pm_ref) < tol
+
+
+def test_table4_vit_rows_close():
+    """The flagship ViT-B/16 rows: HUE within 2pp, fps within 5%."""
+    for name in ("vit_b16_256", "vit_b16_224"):
+        r = pm.analyze(pm.PAPER_MODELS[name])
+        hue_ref, fps_ref, e_ref = pm.PAPER_TABLE4[name]
+        assert abs(r.hue * 100 - hue_ref) < 2.5, (name, r.hue, hue_ref)
+        assert abs(r.fps - fps_ref) / fps_ref < 0.05, (name, r.fps)
+        assert abs(r.energy_j - e_ref) / e_ref < 0.06
+
+
+def test_table4_small_models_order():
+    """Smaller models: the paper's own (HUE, fps) pairs are mutually
+    inconsistent under HUE = useful/(peak*cycles) (see EXPERIMENTS.md), so
+    we assert our model preserves the paper's ORDERING and lands within a
+    documented band."""
+    rows = {n: pm.analyze(pm.PAPER_MODELS[n]) for n in pm.PAPER_TABLE4}
+    # ordering by HUE: vit256 > vit224 > deit_s > swin_t? paper: swin 81,
+    # deit_s 87.2 -> deit_s > swin > deit_t
+    assert rows["vit_b16_256"].hue > rows["deit_s_224"].hue
+    assert rows["deit_s_224"].hue > rows["deit_t_224"].hue
+    # fps ordering matches the paper exactly
+    fps_order_paper = sorted(pm.PAPER_TABLE4,
+                             key=lambda n: pm.PAPER_TABLE4[n][1])
+    fps_order_ours = sorted(pm.PAPER_TABLE4, key=lambda n: rows[n].fps)
+    assert fps_order_paper == fps_order_ours
+    # every HUE within 12pp absolute of the paper value
+    for n, r in rows.items():
+        assert abs(r.hue * 100 - pm.PAPER_TABLE4[n][0]) < 12.0, (n, r.hue)
+
+
+def test_eq5_time_matching():
+    """Eq. 5: the chosen config time-matches engines for ViT-B/16@256."""
+    hw = pm.VitaHW()
+    spec = pm.PAPER_MODELS["vit_b16_256"]
+    s = spec.stages[0]
+    assert s.dim / (hw.k1 * hw.k2) == s.tokens / (hw.k3 * hw.k4)
+
+
+def test_bandwidth_under_budget():
+    """Sec. IV: DRAM access stays 'well under 1 word/cycle' for ViT-B."""
+    r = pm.analyze(pm.PAPER_MODELS["vit_b16_256"])
+    assert r.peak_words_per_cycle < 1.0
+
+
+def test_table5_fps_per_watt():
+    """ViTA's fps/W beats Auto-ViT-acc (Table V): 2.75/0.88 = 3.12."""
+    p, fps, fpw = pm.PAPER_TABLE5["vita_fpga28nm"]
+    assert abs(fps / p - fpw) < 0.01
+    ours = pm.analyze(pm.PAPER_MODELS["deit_b_224"])
+    assert abs(ours.fps - fps) / fps < 0.05
+    assert ours.fps / pm.VitaHW().power_w > \
+        pm.PAPER_TABLE5["auto_vit_acc_fpga16nm"][2]
+
+
+def test_hue_definition_consistency():
+    """Internal consistency: HUE == useful/(total_macs * cycles)."""
+    r = pm.analyze(pm.PAPER_MODELS["deit_s_224"])
+    assert abs(r.hue - r.useful_macs / (r.hw.total_macs * r.total_cycles)) \
+        < 1e-9
+
+
+def test_head_pipeline_fill_drain():
+    """MSA phase cycles ~ (k+1) * per-head slot when time-matched."""
+    hw = pm.VitaHW()
+    s = pm.PAPER_MODELS["vit_b16_256"].stages[0]
+    phases = pm.msa_phase(hw, s)
+    head_phase = phases[0]
+    e1 = s.tokens * s.dim * s.head_dim / (hw.k1 * hw.k2)
+    assert head_phase.cycles >= (s.heads + 1) * e1 * 0.95
+    assert head_phase.cycles <= (s.heads + 1) * e1 * 1.10
+
+
+def test_config_generalization_swin():
+    """Swin runs on the SAME hw config (the paper's configurability claim):
+    analysis must produce sane, positive HUE with no exceptions."""
+    r = pm.analyze(pm.PAPER_MODELS["swin_t_224"])
+    assert 0.3 < r.hue < 1.0
+    assert r.fps > 1.0
