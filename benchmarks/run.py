@@ -24,13 +24,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 
 def main() -> None:
     from benchmarks import (kernel_bench, paper_tables, quant_accuracy,
-                            roofline)
+                            roofline, vision_serve_bench)
 
     paper_tables.main()
     print()
     quant_accuracy.main()
     print()
     kernel_bench.main()
+    print()
+
+    # vision serving throughput (batched ViTA encoder pipeline, float+int8)
+    vision_serve_bench.main()
     print()
 
     # serving throughput on a reduced config (end-to-end system bench)

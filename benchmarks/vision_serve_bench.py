@@ -1,0 +1,79 @@
+"""Vision serving throughput bench (batched ViTA encoder pipeline).
+
+Runs the `VisionServer` micro-batching driver over a small edge-scale ViT
+for batch buckets {1, 8} in both float and int8 (PTQ) modes, printing the
+harness's ``name,us_per_call,derived`` CSV rows and emitting a
+``BENCH_vision_serve.json`` record with throughput and p50/p99 latency —
+the machine-readable counterpart of the paper's fps tables.
+
+Run:  PYTHONPATH=src python benchmarks/vision_serve_bench.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+import jax                                                   # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.launch.vision_serve import (VisionServer, build_edge_vit,
+                                       calibrate)            # noqa: E402
+from repro.models import vit                                 # noqa: E402
+
+BATCHES = (1, 8)
+REQUESTS_PER_RUN = 16
+OUT_PATH = os.path.join("results", "BENCH_vision_serve.json")
+
+
+def main(out_path: str = OUT_PATH) -> dict:
+    cfg = build_edge_vit(image=32, patch=8, dim=96, heads=4, layers=4)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = vit.quantize_vit(params)
+    rng = np.random.default_rng(0)
+    images = rng.standard_normal(
+        (REQUESTS_PER_RUN, cfg.image, cfg.image, 3)).astype(np.float32)
+    cal = calibrate(qparams, cfg, images[:8])
+
+    runs = []
+    preds = {}
+    for mode in ("float", "int8"):
+        for batch in BATCHES:
+            server = VisionServer(cfg, params, qparams=qparams,
+                                  calibrator=cal, mode=mode,
+                                  buckets=(batch,))
+            server.submit_many(images)
+            # warm the compile cache (and reset the remaining requests'
+            # clocks) so the timed drain reports steady-state latency
+            server.step()
+            server.restamp_queued()
+            stats = server.run()
+            stats["batch"] = batch
+            runs.append(stats)
+            preds[(mode, batch)] = [r.pred for r in server.done]
+            us = stats["wall_s"] / max(stats["requests"], 1) * 1e6
+            print(f"vision_serve.{mode}.b{batch},{us:.0f},"
+                  f"img_per_s={stats['throughput_img_s']:.1f} "
+                  f"p50_ms={stats['latency_p50_ms']:.1f} "
+                  f"p99_ms={stats['latency_p99_ms']:.1f}")
+
+    agree = float(np.mean([
+        np.mean(np.asarray(preds[("float", b)]) ==
+                np.asarray(preds[("int8", b)])) for b in BATCHES]))
+    print(f"vision_serve.ptq_agreement,0,frac={agree:.3f}")
+
+    record = {"bench": "vision_serve", "model": cfg.name,
+              "requests_per_run": REQUESTS_PER_RUN,
+              "ptq_pred_agreement": agree, "runs": runs}
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    main()

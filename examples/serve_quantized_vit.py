@@ -3,14 +3,15 @@ int8-quantized ViTA inference path — the paper's deployment scenario.
 
 Pipeline: train briefly on the synthetic class-blob task -> post-training
 quantize (per-channel weights, calibrated activations) -> serve batched
-image requests, reporting throughput, int8-vs-fp32 agreement, and the
-ViTA-model fps estimate for the same network on the FPGA target.
+image requests through the `VisionServer` micro-batcher (pad-to-bucket
+batches over the (batch, head)-grid Pallas pipeline), reporting throughput,
+p50/p99 latency, int8-vs-fp32 agreement, and the ViTA-model fps estimate
+for the same network on the FPGA target.
 
 Run:  PYTHONPATH=src python examples/serve_quantized_vit.py
 """
 
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +20,8 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import perfmodel as pm                      # noqa: E402
-from repro.core.quant import Calibrator                     # noqa: E402
 from repro.data import SyntheticImages                      # noqa: E402
+from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
 from repro.models import vit                                # noqa: E402
 from repro.optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
 
@@ -48,31 +49,33 @@ def main():
 
     # -- PTQ -------------------------------------------------------------
     qparams = vit.quantize_vit(params)
-    cal = Calibrator()
-    for i in range(4):
-        b = data.batch_at(1000 + i)
-        vit.forward(qparams, vit.extract_patches(
-            jnp.asarray(b["images"]), cfg.patch), cfg, observer=cal)
-    cal.freeze()
+    cal = calibrate(qparams, cfg, np.concatenate(
+        [np.asarray(data.batch_at(1000 + i)["images"]) for i in range(4)]))
 
-    # -- batched serving ---------------------------------------------------
-    infer = jax.jit(lambda p: vit.forward(qparams, p, cfg, observer=cal))
-    n_req, agree, correct = 0, 0, 0
-    t0 = time.time()
-    for i in range(16):
+    # -- batched serving (VisionServer micro-batcher) ----------------------
+    imgs, labels = [], []
+    for i in range(4):
         b = data.batch_at(2000 + i)
-        patches = vit.extract_patches(jnp.asarray(b["images"]), cfg.patch)
-        pred_q = np.asarray(jnp.argmax(infer(patches), -1))
-        pred_f = np.asarray(jnp.argmax(
-            vit.forward(params, patches, cfg), -1))
-        n_req += len(pred_q)
-        agree += int((pred_q == pred_f).sum())
-        correct += int((pred_q == b["labels"]).sum())
-    dt = time.time() - t0
-    print(f"[serve] {n_req} images in {dt:.2f}s -> {n_req/dt:.1f} img/s "
-          f"(CPU, int8 path)")
-    print(f"[serve] int8 top-1 {correct/n_req*100:.2f}%  "
-          f"int8==fp32 agreement {agree/n_req*100:.2f}%")
+        imgs.append(np.asarray(b["images"]))
+        labels.append(np.asarray(b["labels"]))
+    imgs = np.concatenate(imgs)
+    labels = np.concatenate(labels)
+
+    results = {}
+    for mode in ("float", "int8"):
+        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
+                              mode=mode, buckets=(1, 2, 4, 8, 16, 32))
+        server.submit_many(imgs)
+        stats = server.run()
+        results[mode] = (stats, np.asarray([r.pred for r in server.done]))
+        print(f"[serve] {mode}: {stats['requests']} images in "
+              f"{stats['wall_s']:.2f}s -> {stats['throughput_img_s']:.1f} "
+              f"img/s, p50 {stats['latency_p50_ms']:.1f}ms "
+              f"p99 {stats['latency_p99_ms']:.1f}ms")
+    pred_f, pred_q = results["float"][1], results["int8"][1]
+    n_req = len(labels)
+    print(f"[serve] int8 top-1 {(pred_q == labels).mean()*100:.2f}%  "
+          f"int8==fp32 agreement {(pred_q == pred_f).mean()*100:.2f}%")
 
     # -- what would ViTA do with this network? ---------------------------
     spec = pm.VisionModelSpec(

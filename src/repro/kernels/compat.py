@@ -1,0 +1,30 @@
+"""Version-compat helpers for the Pallas TPU API surface.
+
+The repo targets the current Pallas API (``pltpu.CompilerParams``); jax
+0.4.x shipped the same dataclass under the name ``TPUCompilerParams``.
+Every kernel builds its compiler params through :func:`compiler_params`
+so the kernels lower on both API generations without per-call-site
+version checks.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from jax.experimental.pallas import tpu as pltpu
+
+# pltpu.CompilerParams (jax >= 0.5) was named TPUCompilerParams in 0.4.x.
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs: Any):
+    """Build TPU compiler params under either Pallas API generation.
+
+    Unknown kwargs (options added in newer jax) are dropped rather than
+    raised, so newer call sites still lower on older toolchains.
+    """
+    fields = getattr(_COMPILER_PARAMS_CLS, "__dataclass_fields__", None)
+    if fields is not None:
+        kwargs = {k: v for k, v in kwargs.items() if k in fields}
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 from .ref import act_fn
 
 
@@ -123,7 +125,7 @@ def fused_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array,
         out_specs=pl.BlockSpec((bn, d_out), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, d_out), x.dtype),
         scratch_shapes=[pltpu.VMEM((bn, d_out), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(*args)

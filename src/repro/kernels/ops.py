@@ -25,6 +25,8 @@ from .head_attention import flash_attention as _flash_pallas
 from .int8_matmul import int8_matmul as _int8_pallas
 from .rglru_scan import rglru_scan as _rglru_pallas
 from .vita_msa import vita_msa as _vita_msa_pallas
+from .vita_msa import vita_msa_batched as _vita_msa_batched_pallas
+from .vita_msa import vita_msa_int8 as _vita_msa_int8_pallas
 
 _BACKEND = "xla"
 _ON_TPU = None
@@ -133,6 +135,24 @@ def vita_msa(z, wq, wk, wv, *, backend: Optional[str] = None):
     if get_backend(backend) == "xla":
         return ref.vita_msa_ref(z, wq, wk, wv)
     return _vita_msa_pallas(z, wq, wk, wv, interpret=_interp())
+
+
+def vita_msa_batched(z, wq, wk, wv, *, backend: Optional[str] = None):
+    """Whole-batch per-head MSA: (B, N, D) -> (B, H, N, Dh), one kernel."""
+    if get_backend(backend) == "xla":
+        return ref.vita_msa_batched_ref(z, wq, wk, wv)
+    return _vita_msa_batched_pallas(z, wq, wk, wv, interpret=_interp())
+
+
+def vita_msa_int8(z_q, wq_q, wk_q, wv_q, x_scale, wq_scale, wk_scale,
+                  wv_scale, *, backend: Optional[str] = None):
+    """int8 PTQ per-head MSA: (B, N, D) int8 -> (B, H, N, Dh) float32."""
+    if get_backend(backend) == "xla":
+        return ref.vita_msa_int8_ref(z_q, wq_q, wk_q, wv_q, x_scale,
+                                     wq_scale, wk_scale, wv_scale)
+    return _vita_msa_int8_pallas(z_q, wq_q, wk_q, wv_q, x_scale,
+                                 wq_scale, wk_scale, wv_scale,
+                                 interpret=_interp())
 
 
 def linear_recurrence(a, b, *, backend: Optional[str] = None,

@@ -124,6 +124,49 @@ def vita_msa_ref(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
     return jnp.einsum("hnm,hme->hne", p, v).astype(z.dtype)
 
 
+def vita_msa_batched_ref(z: jax.Array, wq: jax.Array, wk: jax.Array,
+                         wv: jax.Array, *, acc_dtype=jnp.float32
+                         ) -> jax.Array:
+    """Batched oracle: z (B, N, D); wq/wk/wv (H, D, Dh) -> (B, H, N, Dh)."""
+    h, d, dh = wq.shape
+    zf = z.astype(acc_dtype)
+    q = jnp.einsum("bnd,hde->bhne", zf, wq.astype(acc_dtype))
+    k = jnp.einsum("bnd,hde->bhne", zf, wk.astype(acc_dtype))
+    v = jnp.einsum("bnd,hde->bhne", zf, wv.astype(acc_dtype))
+    s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhme->bhne", p, v).astype(z.dtype)
+
+
+def vita_msa_int8_ref(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
+                      wv_q: jax.Array, x_scale: jax.Array,
+                      wq_scale: jax.Array, wk_scale: jax.Array,
+                      wv_scale: jax.Array) -> jax.Array:
+    """int8 per-head MSA oracle.
+
+    z_q: (B, N, D) int8; w*_q: (H, D, Dh) int8; x_scale scalar;
+    w*_scale: (H, Dh).  Projections accumulate in int32 then requantize to
+    fp32 (activation x per-(head, out-channel) weight scale); softmax and
+    the attention-V product stay fp32 — ViTA's high-precision softmax unit.
+    Returns (B, H, N, Dh) float32.
+    """
+    h, d, dh = wq_q.shape
+    xs = jnp.asarray(x_scale, jnp.float32).reshape(())
+
+    def proj(w_q, w_s):
+        acc = jnp.einsum("bnd,hde->bhne", z_q.astype(jnp.int32),
+                         w_q.astype(jnp.int32))
+        return acc.astype(jnp.float32) * (
+            xs * w_s.astype(jnp.float32)[None, :, None, :])
+
+    q = proj(wq_q, wq_scale)
+    k = proj(wk_q, wk_scale)
+    v = proj(wv_q, wv_scale)
+    s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhnm,bhme->bhne", p, v)
+
+
 # ---------------------------------------------------------------------------
 # int8 matmul — oracle
 # ---------------------------------------------------------------------------

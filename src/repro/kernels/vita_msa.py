@@ -1,20 +1,29 @@
-"""Paper-faithful fused per-head MSA Pallas kernel (ViT-scale).
+"""Paper-faithful fused per-head MSA Pallas kernels (ViT-scale).
 
 This is the direct TPU transcription of ViTA's two-engine head pipeline
 (Sec. III-B2, Fig. 2/4) for vision-transformer sequence lengths (N ~ 49-256,
 where one head's *entire* working set fits in VMEM):
 
-  grid = (heads,)                  # head-level coarse-grained pipeline
-  per step h:
-    engine-1 analogue: Q = z @ Wq[h]; K = z @ Wk[h]; V = z @ Wv[h]
-    engine-2 analogue: SA[h] = softmax(Q K^T / sqrt(Dh)) @ V
+  grid = (batch, heads)            # head-level coarse-grained pipeline
+  per step (b, h):
+    engine-1 analogue: Q = z_b @ Wq[h]; K = z_b @ Wk[h]; V = z_b @ Wv[h]
+    engine-2 analogue: SA[b, h] = softmax(Q K^T / sqrt(Dh)) @ V
 
-* z (the layer input) is the stationary operand, revisited by every head —
-  ViTA's input-stationary dataflow.
-* Wq/Wk/Wv for head h+1 are DMA'd into VMEM while head h computes (Pallas
-  grid pipelining) — the double-buffered weight-column BRAM ping-pong.
+* z_b (image b's layer input) is the stationary operand: heads iterate in
+  the minor grid dimension, so Pallas keeps the z block resident across all
+  H steps of one image — ViTA's input-stationary dataflow.
+* Wq/Wk/Wv for the next (b, h) step are DMA'd into VMEM while the current
+  head computes (Pallas grid pipelining) — the double-buffered
+  weight-column BRAM ping-pong, carried across the batch loop (head-0
+  weights stream back in while image b's last head computes).
 * Only ONE head's Q/K/V/S ever exists on-chip, exactly the paper's memory
   argument for head-wise computation.
+
+The int8 variant is the PTQ inference mode of Sec. III-A through a real
+kernel: int8 x int8 -> int32 projections on the MXU with the fused
+activation x per-(head, out-channel) requantization of `int8_matmul`, and
+the softmax/AV stage kept in fp32 (the paper's dedicated high-precision
+softmax unit).
 
 For LM-scale sequence lengths, `head_attention.flash_attention` is the
 streaming generalization (row-granular online softmax).
@@ -27,43 +36,123 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401 (compat)
+
+from . import compat
 
 
-def _vita_msa_kernel(z_ref, wq_ref, wk_ref, wv_ref, o_ref, *, scale: float):
-    z = z_ref[...]
-    # Engine 1: per-head projections (PE blocks 1-3).
-    q = jnp.dot(z, wq_ref[0], preferred_element_type=jnp.float32)
-    k = jnp.dot(z, wk_ref[0], preferred_element_type=jnp.float32)
-    v = jnp.dot(z, wv_ref[0], preferred_element_type=jnp.float32)
-    # Engine 2: QK^T (PE block 4) -> softmax -> S.V (PE block 5).
+def _attend(q, k, v, o_ref, *, scale: float, out_dtype):
+    """Engine 2: QK^T (PE block 4) -> softmax -> S.V (PE block 5)."""
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     s = s - jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
-    o_ref[0] = jnp.dot(p.astype(z.dtype), v.astype(z.dtype),
-                       preferred_element_type=jnp.float32).astype(o_ref.dtype)
+    o_ref[0, 0] = jnp.dot(p.astype(out_dtype), v.astype(out_dtype),
+                          preferred_element_type=jnp.float32
+                          ).astype(o_ref.dtype)
+
+
+def _vita_msa_kernel(z_ref, wq_ref, wk_ref, wv_ref, o_ref, *, scale: float):
+    z = z_ref[0]
+    # Engine 1: per-head projections (PE blocks 1-3).
+    q = jnp.dot(z, wq_ref[0], preferred_element_type=jnp.float32)
+    k = jnp.dot(z, wk_ref[0], preferred_element_type=jnp.float32)
+    v = jnp.dot(z, wv_ref[0], preferred_element_type=jnp.float32)
+    _attend(q, k, v, o_ref, scale=scale, out_dtype=z.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vita_msa_batched(z: jax.Array, wq: jax.Array, wk: jax.Array,
+                     wv: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """z: (B, N, D); wq/wk/wv: (H, D, Dh) -> (B, H, N, Dh).
+
+    One pallas_call covers the whole batch: grid (B, H), z stationary per
+    image, head weights double-buffered across the batch loop.
+    """
+    b, n, d = z.shape
+    h, _, dh = wq.shape
+    kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5)
+    w_spec = pl.BlockSpec((1, d, dh), lambda i, j: (j, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),   # z stationary
+            w_spec, w_spec, w_spec,                            # head weights
+        ],
+        out_specs=pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n, dh), z.dtype),
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(z, wq, wk, wv)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def vita_msa(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
              *, interpret: bool = False) -> jax.Array:
-    """z: (N, D); wq/wk/wv: (H, D, Dh) -> (H, N, Dh) per-head attention."""
-    n, d = z.shape
-    h, _, dh = wq.shape
-    kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5)
+    """z: (N, D); wq/wk/wv: (H, D, Dh) -> (H, N, Dh) per-head attention.
+
+    Single-image convenience wrapper over the batched (B, H) grid.
+    """
+    return vita_msa_batched(z[None], wq, wk, wv, interpret=interpret)[0]
+
+
+# ---------------------------------------------------------------------------
+# int8 PTQ variant (Sec. III-A requant units fused into engine 1)
+# ---------------------------------------------------------------------------
+
+
+def _vita_msa_int8_kernel(z_ref, wq_ref, wk_ref, wv_ref, xs_ref,
+                          qs_ref, ks_ref, vs_ref, o_ref, *, scale: float):
+    z = z_ref[0]                         # (N, D) int8
+    xs = xs_ref[0, 0]                    # per-tensor activation scale
+
+    def proj(w_ref, ws_ref):
+        # MXU-native int8 x int8 -> int32 with the requant fused in VMEM.
+        acc = jax.lax.dot_general(
+            z, w_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * (xs * ws_ref[0])
+
+    q = proj(wq_ref, qs_ref)
+    k = proj(wk_ref, ks_ref)
+    v = proj(wv_ref, vs_ref)
+    _attend(q, k, v, o_ref, scale=scale, out_dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def vita_msa_int8(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
+                  wv_q: jax.Array, x_scale: jax.Array,
+                  wq_scale: jax.Array, wk_scale: jax.Array,
+                  wv_scale: jax.Array, *,
+                  interpret: bool = False) -> jax.Array:
+    """Fused int8 per-head MSA over the whole batch.
+
+    z_q: (B, N, D) int8; w*_q: (H, D, Dh) int8; x_scale: scalar float32;
+    w*_scale: (H, Dh) per-(head, out-channel) float32.  Returns
+    (B, H, N, Dh) float32 (attention runs in fp32 after the requant).
+    """
+    b, n, d = z_q.shape
+    h, _, dh = wq_q.shape
+    x_scale = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_vita_msa_int8_kernel, scale=dh ** -0.5)
+    w_spec = pl.BlockSpec((1, d, dh), lambda i, j: (j, 0, 0))
+    s_spec = pl.BlockSpec((1, dh), lambda i, j: (j, 0))
     return pl.pallas_call(
         kernel,
-        grid=(h,),
+        grid=(b, h),
         in_specs=[
-            pl.BlockSpec((n, d), lambda i: (0, 0)),       # z stationary
-            pl.BlockSpec((1, d, dh), lambda i: (i, 0, 0)),  # head weights
-            pl.BlockSpec((1, d, dh), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, d, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),   # z stationary
+            w_spec, w_spec, w_spec,
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            s_spec, s_spec, s_spec,
         ],
-        out_specs=pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((h, n, dh), z.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        out_specs=pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n, dh), jnp.float32),
+        compiler_params=compat.compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(z, wq, wk, wv)
+    )(z_q, wq_q, wk_q, wv_q, x_scale,
+      wq_scale.astype(jnp.float32), wk_scale.astype(jnp.float32),
+      wv_scale.astype(jnp.float32))

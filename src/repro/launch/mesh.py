@@ -9,9 +9,28 @@ tests and benches must keep seeing 1 device).
 
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 import jax
 from jax.sharding import Mesh
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Sequence[str], *,
+                     devices=None) -> Mesh:
+    """`jax.make_mesh` across API generations.
+
+    jax >= 0.5 takes ``axis_types`` (we want every axis Auto, the default
+    sharding-in-types behaviour); 0.4.x has neither the kwarg nor the
+    ``jax.sharding.AxisType`` enum — there, plain `make_mesh` already gives
+    the equivalent untyped mesh.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes), devices=devices,
+            axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -23,9 +42,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
         raise RuntimeError(
             f"mesh {shape} needs {need} devices, found {len(devices)}; "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(
-        shape, axes, devices=devices[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=devices[:need])
 
 
 def make_debug_mesh(*, multi_pod: bool = False, model: int = 2,
@@ -34,9 +51,7 @@ def make_debug_mesh(*, multi_pod: bool = False, model: int = 2,
     shape = (2, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     need = int(np.prod(shape))
-    return jax.make_mesh(
-        shape, axes, devices=jax.devices()[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes, devices=jax.devices()[:need])
 
 
 # TPU v5e hardware constants used by the roofline analysis.

@@ -4,17 +4,21 @@ The paper's system is an inference accelerator; this is the serving-side
 end-to-end driver.  A fixed pool of B decode slots runs lock-step decode
 steps (one fused decode_step over the whole batch — the TPU-efficient
 regime); finished slots are refilled from the request queue with a prefill.
-Optionally serves the int8-quantized model (ViTA's PTQ mode) for the ViT
-examples; LM serving here uses the bf16/fp32 path.
 
-Usage (CPU example):
+Vision serving (ViT/DeiT forward passes, float or ViTA's int8 PTQ mode)
+lives in `vision_serve.py` — pass ``--vision`` to route there:
+
+Usage (CPU examples):
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
       --requests 16 --batch 4 --max-new 32
+  PYTHONPATH=src python -m repro.launch.serve --vision --requests 32 \
+      --buckets 1,2,4,8 --mode both
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from typing import List, Optional
 
@@ -84,6 +88,11 @@ class SlotServer:
 
 
 def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--vision" in argv:                 # route to the vision micro-batcher
+        from repro.launch import vision_serve
+        argv.remove("--vision")
+        return vision_serve.main(argv)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-3b")
     ap.add_argument("--reduced", action="store_true")

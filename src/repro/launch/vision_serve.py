@@ -1,0 +1,257 @@
+"""VisionServer — micro-batching driver for batched ViT/DeiT inference.
+
+The LM side of `launch/serve.py` does slot-based continuous batching for
+autoregressive decode; vision inference is a single forward pass per
+request, so the serving shape is different: requests queue up, the server
+drains them in micro-batches, pads each micro-batch up to the nearest
+*batch bucket* (so only a handful of XLA programs are ever compiled), and
+runs the whole bucket through ONE batched forward — which on the Pallas
+path is one `(batch, head)`-grid `vita_msa` kernel per layer, ViTA's
+head-level pipeline swept across the batch.
+
+Modes:
+  * ``float`` — the fp32/bf16 path through the batched Pallas ops;
+  * ``int8``  — the PTQ deployment mode of Sec. III-A: per-channel int8
+    weights + calibrated activation scales through the fused int8 MSA /
+    quantized matmul path.
+
+Usage (CPU example):
+  PYTHONPATH=src python -m repro.launch.serve --vision \
+      --requests 32 --buckets 1,2,4,8 --mode both
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import Calibrator
+from repro.models import vit
+
+
+class VisionRequest:
+    """One queued image-classification request."""
+
+    def __init__(self, rid: int, image: np.ndarray):
+        self.rid = rid
+        self.image = image
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+        self.pred: Optional[int] = None
+        self.logits: Optional[np.ndarray] = None
+
+    @property
+    def latency_s(self) -> float:
+        assert self.t_done is not None, "request not served yet"
+        return self.t_done - self.t_submit
+
+
+class VisionServer:
+    """Queue + pad-to-bucket micro-batching over a ViT/DeiT forward.
+
+    ``buckets`` are the allowed batch sizes (ascending).  A drain step takes
+    up to ``buckets[-1]`` queued requests, rounds up to the smallest bucket
+    that fits, pads with zero images, and runs one batched forward — one
+    compiled program per (bucket, mode), cached across the server's life.
+    """
+
+    def __init__(self, cfg: vit.ViTConfig, params, *,
+                 qparams=None, calibrator: Optional[Calibrator] = None,
+                 mode: str = "float",
+                 buckets: Sequence[int] = (1, 2, 4, 8)):
+        assert mode in ("float", "int8")
+        if mode == "int8":
+            assert qparams is not None, "int8 mode needs quantized params"
+            assert calibrator is not None and calibrator.frozen is not None, \
+                "int8 mode needs a frozen activation-scale calibrator"
+        self.cfg = cfg
+        self.params = params
+        self.qparams = qparams
+        self.calibrator = calibrator
+        self.mode = mode
+        self.buckets = tuple(sorted(buckets))
+        assert self.buckets and self.buckets[0] > 0, \
+            f"batch buckets must be positive, got {buckets}"
+        self.queue: List[VisionRequest] = []
+        self.done: List[VisionRequest] = []
+        self.n_batches = 0
+        self.n_padded = 0
+        self._rid = 0
+        if self.mode == "int8":
+            qp, frozen_cal = self.qparams, self.calibrator
+
+            def _fwd(patches):
+                return vit.forward(qp, patches, cfg, observer=frozen_cal)
+        else:
+            p = self.params
+
+            def _fwd(patches):
+                return vit.forward(p, patches, cfg)
+        # jit's own shape-keyed cache gives one compiled program per bucket.
+        self._forward = jax.jit(_fwd)
+
+    # -- request plane ----------------------------------------------------
+
+    def submit(self, image: np.ndarray) -> VisionRequest:
+        req = VisionRequest(self._rid, np.asarray(image))
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    def submit_many(self, images: np.ndarray) -> List[VisionRequest]:
+        return [self.submit(im) for im in images]
+
+    # -- execution plane --------------------------------------------------
+
+    def _bucket_for(self, k: int) -> int:
+        for b in self.buckets:
+            if b >= k:
+                return b
+        return self.buckets[-1]
+
+    def step(self) -> int:
+        """Drain one micro-batch; returns the number of requests served."""
+        if not self.queue:
+            return 0
+        take = min(len(self.queue), self.buckets[-1])
+        batch, self.queue = self.queue[:take], self.queue[take:]
+        bucket = self._bucket_for(take)
+        images = np.stack([r.image for r in batch])
+        if bucket > take:                      # pad up to the bucket size
+            pad = np.zeros((bucket - take,) + images.shape[1:],
+                           images.dtype)
+            images = np.concatenate([images, pad])
+            self.n_padded += bucket - take
+        patches = vit.extract_patches(jnp.asarray(images), self.cfg.patch)
+        logits = np.asarray(jax.block_until_ready(self._forward(patches)))
+        t = time.perf_counter()
+        for i, req in enumerate(batch):
+            req.t_done = t
+            req.logits = logits[i]
+            req.pred = int(np.argmax(logits[i]))
+        self.done.extend(batch)
+        self.n_batches += 1
+        return take
+
+    def restamp_queued(self) -> None:
+        """Reset queued requests' submit clocks (e.g. after a warm-up drain,
+        so reported latencies are steady-state, not compile time)."""
+        t = time.perf_counter()
+        for r in self.queue:
+            r.t_submit = t
+
+    def run(self) -> Dict[str, float]:
+        """Drain the whole queue and return this run's serving statistics."""
+        batches0, padded0 = self.n_batches, self.n_padded
+        t0 = time.perf_counter()
+        served = 0
+        while self.queue:
+            served += self.step()
+        dt = time.perf_counter() - t0
+        lat_ms = np.array([r.latency_s for r in self.done[-served:]]) * 1e3 \
+            if served else np.zeros((0,))
+        return {
+            "mode": self.mode,
+            "requests": served,
+            "batches": self.n_batches - batches0,
+            "padded": self.n_padded - padded0,
+            "wall_s": dt,
+            "throughput_img_s": served / dt if dt > 0 else 0.0,
+            "latency_p50_ms": float(np.percentile(lat_ms, 50))
+            if served else 0.0,
+            "latency_p99_ms": float(np.percentile(lat_ms, 99))
+            if served else 0.0,
+            "latency_mean_ms": float(lat_ms.mean()) if served else 0.0,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Calibration helper + CLI
+# ---------------------------------------------------------------------------
+
+
+def calibrate(qparams, cfg: vit.ViTConfig, images: np.ndarray,
+              n_batches: int = 4) -> Calibrator:
+    """Run calibration forwards and freeze the activation scales."""
+    cal = Calibrator()
+    for chunk in np.array_split(images, n_batches):
+        if len(chunk) == 0:
+            continue
+        vit.forward(qparams, vit.extract_patches(
+            jnp.asarray(chunk), cfg.patch), cfg, observer=cal)
+    cal.freeze()
+    return cal
+
+
+def build_edge_vit(image: int = 32, patch: int = 8, dim: int = 96,
+                   heads: int = 4, layers: int = 4, n_classes: int = 10,
+                   backend: Optional[str] = None) -> vit.ViTConfig:
+    return vit.ViTConfig(name=f"vit_edge_{image}", image=image, patch=patch,
+                         dim=dim, heads=heads, layers=layers,
+                         n_classes=n_classes, backend=backend)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="vision_serve")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--buckets", default="1,2,4,8")
+    ap.add_argument("--mode", choices=("float", "int8", "both"),
+                    default="both")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default=None)
+    ap.add_argument("--image", type=int, default=32)
+    ap.add_argument("--patch", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=96)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None,
+                    help="write stats as a BENCH_*.json-style record")
+    args = ap.parse_args(argv)
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    cfg = build_edge_vit(args.image, args.patch, args.dim, args.heads,
+                         args.layers, backend=args.backend)
+    params = vit.init_params(jax.random.PRNGKey(args.seed), cfg)
+    rng = np.random.default_rng(args.seed)
+    images = rng.standard_normal(
+        (args.requests, cfg.image, cfg.image, 3)).astype(np.float32)
+
+    modes = ("float", "int8") if args.mode == "both" else (args.mode,)
+    qparams = cal = None
+    if "int8" in modes:
+        qparams = vit.quantize_vit(params)
+        cal = calibrate(qparams, cfg, images[:8])
+
+    all_stats = []
+    for mode in modes:
+        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
+                              mode=mode, buckets=buckets)
+        server.submit_many(images)
+        stats = server.run()
+        all_stats.append(stats)
+        print(f"[vision-serve] {cfg.name} mode={mode} "
+              f"{stats['requests']} reqs in {stats['wall_s']:.2f}s -> "
+              f"{stats['throughput_img_s']:.1f} img/s, "
+              f"p50 {stats['latency_p50_ms']:.1f}ms "
+              f"p99 {stats['latency_p99_ms']:.1f}ms "
+              f"({stats['batches']} batches, {stats['padded']} padded)")
+
+    if args.json_out:
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump({"bench": "vision_serve", "model": cfg.name,
+                       "buckets": list(buckets), "runs": all_stats}, f,
+                      indent=2)
+        print(f"[vision-serve] wrote {args.json_out}")
+    return all_stats
+
+
+if __name__ == "__main__":
+    main()

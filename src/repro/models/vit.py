@@ -158,8 +158,11 @@ def forward(params: Params, patches: jax.Array, cfg: ViTConfig,
         if quantized:
             sa = _quant_msa(lp, h, cfg, obs, i)
         else:
-            sa = jax.vmap(lambda hb: ops.vita_msa(
-                hb, lp["wq"], lp["wk"], lp["wv"], backend=cfg.backend))(h)
+            # One (batch, head)-grid kernel call over the whole batch — no
+            # per-image vmap; z stays stationary per image, head weights
+            # double-buffer across the batch loop.
+            sa = ops.vita_msa_batched(h, lp["wq"], lp["wk"], lp["wv"],
+                                      backend=cfg.backend)
             sa = sa.transpose(0, 2, 1, 3).reshape(b, n, cfg.dim)
         x = x + _maybe_q_matmul(sa, lp["w_msa"], obs, f"l{i}.w_msa")
         h = layer_norm(x, lp["ln2_w"], lp["ln2_b"])
@@ -178,26 +181,23 @@ def forward(params: Params, patches: jax.Array, cfg: ViTConfig,
     return _maybe_q_matmul(pooled, params["head"], obs, "head")
 
 
+def _head_scale(wq: QTensor) -> jax.Array:
+    """Per-(head, out-channel) scale (H, 1, Dh) -> the (H, Dh) kernel form."""
+    h, _, dh = wq.values.shape
+    return wq.scale.reshape(h, dh)
+
+
 def _quant_msa(lp, h, cfg: ViTConfig, obs, i: int) -> jax.Array:
-    """int8 per-head MSA: Q/K/V projections in int8, attention in fp32
-    (softmax stays high precision, as in ViTA's dedicated softmax unit)."""
+    """int8 per-head MSA through the fused Pallas path: Q/K/V projections
+    in int8 with the requant fused in-kernel, attention in fp32 (softmax
+    stays high precision, as in ViTA's dedicated softmax unit)."""
     b, n, d = h.shape
     scale = obs.observe(f"l{i}.qkv_in", h)
     hq = jnp.clip(jnp.round(h / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-
-    def proj(wq: QTensor, name):
-        acc = jnp.einsum("bnd,hde->bhne", hq.astype(jnp.int32),
-                         wq.values.astype(jnp.int32))
-        # per-(head, out-channel) weight scale: (H, 1, Dh) -> (1, H, 1, Dh)
-        ws = wq.scale[None] if wq.scale.ndim == 3 else wq.scale
-        return acc.astype(jnp.float32) * (scale * ws)
-
-    q = proj(lp["wq"], "wq")
-    k = proj(lp["wk"], "wk")
-    v = proj(lp["wv"], "wv")
-    s = jnp.einsum("bhne,bhme->bhnm", q, k) * (cfg.head_dim ** -0.5)
-    p = jax.nn.softmax(s, axis=-1)
-    sa = jnp.einsum("bhnm,bhme->bhne", p, v)
+    sa = ops.vita_msa_int8(
+        hq, lp["wq"].values, lp["wk"].values, lp["wv"].values,
+        scale, _head_scale(lp["wq"]), _head_scale(lp["wk"]),
+        _head_scale(lp["wv"]), backend=cfg.backend)
     return sa.transpose(0, 2, 1, 3).reshape(b, n, d)
 
 

@@ -10,7 +10,7 @@ from repro.kernels import ref
 from repro.kernels.fused_mlp import fused_mlp
 from repro.kernels.head_attention import decode_attention, flash_attention
 from repro.kernels.int8_matmul import int8_matmul
-from repro.kernels.vita_msa import vita_msa
+from repro.kernels.vita_msa import vita_msa, vita_msa_batched, vita_msa_int8
 
 
 def rand(key, shape, dtype=jnp.float32, scale=1.0):
@@ -193,6 +193,68 @@ def test_vita_msa_head_independence():
     np.testing.assert_allclose(out[[0, 1, 3]], base[[0, 1, 3]],
                                rtol=1e-6, atol=1e-6)
     assert not np.allclose(out[2], base[2])
+
+
+@pytest.mark.parametrize("b", [1, 3, 8])
+@pytest.mark.parametrize("h", [3, 12])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vita_msa_batched_grid(b, h, dtype):
+    """The (batch, head) grid covers the whole batch in one pallas_call and
+    matches the per-image oracle for every image."""
+    n, d, dh = 49, 96, 16
+    ks = jax.random.split(jax.random.PRNGKey(10), 4)
+    z = rand(ks[0], (b, n, d), dtype, 0.3)
+    wq = rand(ks[1], (h, d, dh), dtype, 0.05)
+    wk = rand(ks[2], (h, d, dh), dtype, 0.05)
+    wv = rand(ks[3], (h, d, dh), dtype, 0.05)
+    out = vita_msa_batched(z, wq, wk, wv, interpret=True)
+    assert out.shape == (b, h, n, dh)
+    expect = ref.vita_msa_batched_ref(z, wq, wk, wv)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), expect.astype(jnp.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 10)
+    # agrees image-by-image with the single-image oracle
+    for i in range(b):
+        np.testing.assert_allclose(
+            out[i].astype(jnp.float32),
+            ref.vita_msa_ref(z[i], wq, wk, wv).astype(jnp.float32),
+            rtol=TOL[dtype], atol=TOL[dtype] * 10)
+
+
+@pytest.mark.parametrize("b,h", [(1, 3), (4, 12)])
+def test_vita_msa_int8_matches_ref(b, h):
+    n, d, dh = 64, 96, 16
+    ks = jax.random.split(jax.random.PRNGKey(13), 7)
+    zq = jax.random.randint(ks[0], (b, n, d), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (h, d, dh), -127, 128, jnp.int8)
+    wk = jax.random.randint(ks[2], (h, d, dh), -127, 128, jnp.int8)
+    wv = jax.random.randint(ks[3], (h, d, dh), -127, 128, jnp.int8)
+    xs = jnp.asarray(0.011)
+    qs = jax.random.uniform(ks[4], (h, dh), minval=1e-3, maxval=0.03)
+    ss = jax.random.uniform(ks[5], (h, dh), minval=1e-3, maxval=0.03)
+    vs = jax.random.uniform(ks[6], (h, dh), minval=1e-3, maxval=0.03)
+    out = vita_msa_int8(zq, wq, wk, wv, xs, qs, ss, vs, interpret=True)
+    assert out.shape == (b, h, n, dh) and out.dtype == jnp.float32
+    expect = ref.vita_msa_int8_ref(zq, wq, wk, wv, xs, qs, ss, vs)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_vita_msa_int8_approximates_float():
+    """Quantize a float problem per-(head, out-channel) and check the int8
+    kernel tracks the float kernel within PTQ error."""
+    from repro.core.quant import INT8_MAX, amax_scale, quantize
+    b, n, d, h, dh = 2, 32, 48, 4, 12
+    ks = jax.random.split(jax.random.PRNGKey(14), 4)
+    z = rand(ks[0], (b, n, d), scale=0.3)
+    ws = [rand(k, (h, d, dh), scale=0.05) for k in ks[1:]]
+    qts = [quantize(w, amax_scale(w, axis=(1,))) for w in ws]
+    xs = amax_scale(z)
+    zq = jnp.clip(jnp.round(z / xs), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    out = vita_msa_int8(
+        zq, *[q.values for q in qts], xs,
+        *[q.scale.reshape(h, dh) for q in qts], interpret=True)
+    expect = ref.vita_msa_batched_ref(z, *ws)
+    np.testing.assert_allclose(out, expect, rtol=0.1, atol=0.02)
 
 
 # ---------------------------------------------------------------------------

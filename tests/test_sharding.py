@@ -21,7 +21,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def production_abstract_mesh(multi_pod=False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.sharding.AbstractMesh(shape, axes)
+    return shd.abstract_mesh(shape, axes)
 
 
 @pytest.mark.parametrize("arch", configs.list_archs())

@@ -1,0 +1,92 @@
+"""VisionServer micro-batching driver: drain semantics, bucket padding,
+latency bookkeeping, and float-vs-int8 PTQ agreement."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.vision_serve import (VisionServer, build_edge_vit,
+                                       calibrate)
+from repro.models import vit
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = build_edge_vit(image=16, patch=8, dim=48, heads=4, layers=2,
+                         n_classes=10)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    images = rng.standard_normal((11, cfg.image, cfg.image, 3)
+                                 ).astype(np.float32)
+    return cfg, params, images
+
+
+def test_all_requests_drain_with_latency(tiny_setup):
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    reqs = server.submit_many(images)
+    stats = server.run()
+    assert stats["requests"] == len(images)
+    assert not server.queue and len(server.done) == len(images)
+    for r in reqs:
+        assert r.t_done is not None and r.pred is not None
+        assert 0 <= r.pred < cfg.n_classes
+        assert r.latency_s >= 0
+    assert stats["throughput_img_s"] > 0
+    assert stats["latency_p99_ms"] >= stats["latency_p50_ms"] > 0
+    # 11 requests over max bucket 4: 4 + 4 + 3-padded-to-4 = 3 batches
+    assert stats["batches"] == 3 and stats["padded"] == 1
+
+
+def test_bucket_padding(tiny_setup):
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(4,))
+    server.submit_many(images[:3])
+    stats = server.run()
+    assert stats["requests"] == 3
+    assert stats["padded"] == 1          # 3 requests padded up to bucket 4
+    # padding must not perturb the real requests' logits
+    solo = VisionServer(cfg, params, mode="float", buckets=(1,))
+    solo.submit(images[0])
+    solo.run()
+    np.testing.assert_allclose(server.done[0].logits, solo.done[0].logits,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int8_and_float_agree_within_ptq_tolerance(tiny_setup):
+    cfg, params, images = tiny_setup
+    qparams = vit.quantize_vit(params)
+    cal = calibrate(qparams, cfg, images[:8])
+
+    results = {}
+    for mode in ("float", "int8"):
+        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
+                              mode=mode, buckets=(1, 2, 4))
+        server.submit_many(images)
+        stats = server.run()
+        assert stats["requests"] == len(images)
+        results[mode] = np.stack([r.logits for r in server.done])
+    scale = np.abs(results["float"]).max()
+    err = np.abs(results["float"] - results["int8"]).max()
+    assert err <= 0.1 * scale + 0.05, (err, scale)
+
+
+def test_int8_mode_requires_calibration(tiny_setup):
+    cfg, params, _ = tiny_setup
+    with pytest.raises(AssertionError):
+        VisionServer(cfg, params, qparams=vit.quantize_vit(params),
+                     calibrator=None, mode="int8")
+
+
+def test_pallas_and_xla_backends_agree(tiny_setup):
+    cfg, params, images = tiny_setup
+    import dataclasses
+    logits = {}
+    for backend in ("xla", "pallas"):
+        bcfg = dataclasses.replace(cfg, backend=backend)
+        server = VisionServer(bcfg, params, mode="float", buckets=(4,))
+        server.submit_many(images[:4])
+        server.run()
+        logits[backend] = np.stack([r.logits for r in server.done])
+    np.testing.assert_allclose(logits["pallas"], logits["xla"],
+                               rtol=2e-4, atol=2e-4)
