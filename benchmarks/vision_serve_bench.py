@@ -1,16 +1,23 @@
-"""Vision serving throughput bench (batched ViTA encoder pipeline).
+"""Vision serving throughput bench — every registered model, one pipeline.
 
-Runs the `VisionServer` micro-batching driver over a small edge-scale ViT
-for batch buckets {1, 8} in both float and int8 (PTQ) modes, printing the
-harness's ``name,us_per_call,derived`` CSV rows and emitting a
-``BENCH_vision_serve.json`` record with throughput and p50/p99 latency —
-the machine-readable counterpart of the paper's fps tables.
+Runs the `VisionServer` micro-batching driver over EACH model in
+`models.vision_registry` (ViT/DeiT/Swin through the same batched control
+program) for a sweep of batch buckets in both float and int8 (PTQ) modes,
+printing the harness's ``name,us_per_call,derived`` CSV rows and emitting a
+``BENCH_vision_serve.json`` record with per-model throughput, p50/p99
+latency, int8-vs-float prediction agreement and logit error — the
+machine-readable counterpart of the paper's fps tables.
 
-Run:  PYTHONPATH=src python benchmarks/vision_serve_bench.py
+The bench FAILS (non-zero exit) if any registered model is missing a bench
+row, or if a model's int8 logits drift outside the calibration tolerance —
+CI runs ``--smoke`` and uploads the JSON as an artifact.
+
+Run:  PYTHONPATH=src python benchmarks/vision_serve_bench.py [--smoke]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -21,28 +28,27 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 import jax                                                   # noqa: E402
 import numpy as np                                           # noqa: E402
 
-from repro.launch.vision_serve import (VisionServer, build_edge_vit,
-                                       calibrate)            # noqa: E402
-from repro.models import vit                                 # noqa: E402
+from repro.core.quant import ptq_tolerance                   # noqa: E402
+from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
+from repro.models import vision_registry                     # noqa: E402
 
-BATCHES = (1, 8)
-REQUESTS_PER_RUN = 16
 OUT_PATH = os.path.join("results", "BENCH_vision_serve.json")
 
 
-def main(out_path: str = OUT_PATH) -> dict:
-    cfg = build_edge_vit(image=32, patch=8, dim=96, heads=4, layers=4)
-    params = vit.init_params(jax.random.PRNGKey(0), cfg)
-    qparams = vit.quantize_vit(params)
-    rng = np.random.default_rng(0)
+def bench_model(name: str, *, requests: int, batches, seed: int = 0):
+    """One model through float+int8 x batch buckets; returns (rows, parity)."""
+    cfg = vision_registry.build_cfg(name)
+    params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
+    qparams = vision_registry.quantize(params)
+    rng = np.random.default_rng(seed)
     images = rng.standard_normal(
-        (REQUESTS_PER_RUN, cfg.image, cfg.image, 3)).astype(np.float32)
-    cal = calibrate(qparams, cfg, images[:8])
+        (requests, cfg.image, cfg.image, 3)).astype(np.float32)
+    cal = calibrate(qparams, cfg, images[:max(requests // 2, 1)])
 
-    runs = []
-    preds = {}
+    rows = []
+    logits = {}
     for mode in ("float", "int8"):
-        for batch in BATCHES:
+        for batch in batches:
             server = VisionServer(cfg, params, qparams=qparams,
                                   calibrator=cal, mode=mode,
                                   buckets=(batch,))
@@ -52,26 +58,71 @@ def main(out_path: str = OUT_PATH) -> dict:
             server.step()
             server.restamp_queued()
             stats = server.run()
+            stats["model"] = name           # registry name (the join key)
+            stats["config"] = cfg.name      # concrete geometry
             stats["batch"] = batch
-            runs.append(stats)
-            preds[(mode, batch)] = [r.pred for r in server.done]
+            rows.append(stats)
+            done = sorted(server.done, key=lambda r: r.rid)
+            logits[(mode, batch)] = np.stack([r.logits for r in done])
             us = stats["wall_s"] / max(stats["requests"], 1) * 1e6
-            print(f"vision_serve.{mode}.b{batch},{us:.0f},"
+            print(f"vision_serve.{name}.{mode}.b{batch},{us:.0f},"
                   f"img_per_s={stats['throughput_img_s']:.1f} "
                   f"p50_ms={stats['latency_p50_ms']:.1f} "
                   f"p99_ms={stats['latency_p99_ms']:.1f}")
 
     agree = float(np.mean([
-        np.mean(np.asarray(preds[("float", b)]) ==
-                np.asarray(preds[("int8", b)])) for b in BATCHES]))
-    print(f"vision_serve.ptq_agreement,0,frac={agree:.3f}")
+        np.mean(np.argmax(logits[("float", b)], -1) ==
+                np.argmax(logits[("int8", b)], -1)) for b in batches]))
+    err = max(float(np.abs(logits[("float", b)] -
+                           logits[("int8", b)]).max()) for b in batches)
+    scale = max(float(np.abs(logits[("float", b)]).max()) for b in batches)
+    parity = {"model": name, "ptq_pred_agreement": agree,
+              "ptq_logit_max_err": err, "float_logit_scale": scale,
+              "within_tolerance": bool(err <= ptq_tolerance(scale))}
+    print(f"vision_serve.{name}.ptq_agreement,0,frac={agree:.3f} "
+          f"logit_err={err:.4f}/{scale:.4f}")
+    return rows, parity
 
-    record = {"bench": "vision_serve", "model": cfg.name,
-              "requests_per_run": REQUESTS_PER_RUN,
-              "ptq_pred_agreement": agree, "runs": runs}
-    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
-    with open(out_path, "w") as f:
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(prog="vision_serve_bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small request counts (CI)")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated subset (default: all registered)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+
+    models = (args.models.split(",") if args.models
+              else list(vision_registry.list_models()))
+    requests = 8 if args.smoke else 16
+    batches = (1, 4) if args.smoke else (1, 8)
+
+    runs, parities = [], []
+    for name in models:
+        rows, parity = bench_model(name, requests=requests, batches=batches)
+        runs.extend(rows)
+        parities.append(parity)
+
+    record = {"bench": "vision_serve", "smoke": args.smoke,
+              "models": models, "requests_per_run": requests,
+              "batches": list(batches), "ptq_parity": parities,
+              "runs": runs}
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
+    print(f"[vision-serve-bench] wrote {args.out}")
+
+    # -- registry coverage + PTQ tolerance gates (CI fails on either) ------
+    want = {(m, mode) for m in models for mode in ("float", "int8")}
+    have = {(r["model"], r["mode"]) for r in runs}
+    missing = want - have
+    if missing:
+        raise SystemExit(f"missing bench rows for: {sorted(missing)}")
+    bad = [p["model"] for p in parities if not p["within_tolerance"]]
+    if bad:
+        raise SystemExit(f"int8 logits outside calibration tolerance "
+                         f"for: {bad}")
     return record
 
 

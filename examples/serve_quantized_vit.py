@@ -1,12 +1,20 @@
 """Serve a (small) vision transformer with batched requests through the
 int8-quantized ViTA inference path — the paper's deployment scenario.
 
-Pipeline: train briefly on the synthetic class-blob task -> post-training
-quantize (per-channel weights, calibrated activations) -> serve batched
-image requests through the `VisionServer` micro-batcher (pad-to-bucket
-batches over the (batch, head)-grid Pallas pipeline), reporting throughput,
-p50/p99 latency, int8-vs-fp32 agreement, and the ViTA-model fps estimate
-for the same network on the FPGA target.
+Pipeline: build the registry's ``vit_edge`` model -> train briefly on the
+synthetic class-blob task -> post-training quantize (per-channel weights,
+calibrated activations) -> serve batched image requests through the
+`VisionServer` micro-batcher (pad-to-bucket batches over the
+(batch, head)-grid Pallas pipeline), reporting throughput, p50/p99
+latency, int8-vs-fp32 agreement, and the ViTA-model fps estimate for the
+same network on the FPGA target.
+
+The serving CLI covers the same ground (and the other registered models —
+DeiT, Swin — through the same control program) without the training step:
+
+  PYTHONPATH=src python -m repro.launch.serve --vision --list-models
+  PYTHONPATH=src python -m repro.launch.serve --vision --model swin_t \
+      --mode both
 
 Run:  PYTHONPATH=src python examples/serve_quantized_vit.py
 """
@@ -22,15 +30,15 @@ sys.path.insert(0, "src")
 from repro.core import perfmodel as pm                      # noqa: E402
 from repro.data import SyntheticImages                      # noqa: E402
 from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
-from repro.models import vit                                # noqa: E402
+from repro.models import vision_registry, vit               # noqa: E402
 from repro.optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
 
 
 def main():
-    cfg = vit.ViTConfig(name="vit_edge", image=32, patch=8, dim=96,
-                        heads=4, layers=4, n_classes=10)
-    data = SyntheticImages(image=32, n_classes=10, batch=32, seed=0)
-    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    cfg = vision_registry.build_cfg("vit_edge")
+    data = SyntheticImages(image=cfg.image, n_classes=cfg.n_classes,
+                           batch=32, seed=0)
+    params = vision_registry.init_params(jax.random.PRNGKey(0), cfg)
 
     # -- brief training ------------------------------------------------
     def loss_fn(p, images, labels):
@@ -78,12 +86,8 @@ def main():
           f"int8==fp32 agreement {(pred_q == pred_f).mean()*100:.2f}%")
 
     # -- what would ViTA do with this network? ---------------------------
-    spec = pm.VisionModelSpec(
-        name=cfg.name, image=(32, 32, 3), patch=8,
-        stages=(pm.StageSpec(layers=cfg.layers, dim=cfg.dim,
-                             heads=cfg.heads, tokens=cfg.tokens),),
-        embed_dim=cfg.dim)
-    r = pm.analyze(spec)
+    # (the same spec the schedule compiler consumes drives the perf model)
+    r = pm.analyze(vit.to_spec(cfg))
     print(f"[vita-model] same net on ViTA@150MHz: {r.fps:.0f} fps at "
           f"{pm.VitaHW().power_w} W (HUE {r.hue*100:.0f}%)")
 

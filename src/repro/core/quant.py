@@ -144,6 +144,45 @@ def quantize_params(params: Any,
     return jax.tree_util.tree_map_with_path(_q, params)
 
 
+# Vision-model PTQ conventions (shared by ViT/DeiT and Swin param trees):
+# per-head projection stacks (H, D, Dh) are quantized per-(head, out-channel)
+# — the scale granularity the fused int8 MSA kernel requantizes at — and
+# plain matmul weights per-output-channel.  Norms, biases, relative-position
+# bias tables and the learned positional embedding stay float.
+_PER_HEAD_KEYS = frozenset({"wq", "wk", "wv"})
+_PER_CHANNEL_KEYS = frozenset({"patch_embed", "head", "w_msa",
+                               "w_up", "w_down", "merge_w"})
+
+
+def quantize_vision_params(params: Any) -> Any:
+    """int8 PTQ of a vision-transformer param tree (ViT/DeiT or Swin).
+
+    Works on the schedule-normalized layout: nested dicts/lists with
+    per-head ``wq/wk/wv`` stacks, ``w_msa``/``w_up``/``w_down`` block
+    matmuls, and (Swin) ``merge_w`` patch-merging projections.
+    """
+
+    def _q(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in _PER_HEAD_KEYS:
+                    # reduce over the contraction dim D only -> (H, 1, Dh)
+                    out[k] = quantize(v, amax_scale(v, axis=(1,)))
+                elif k in _PER_CHANNEL_KEYS:
+                    out[k] = quantize_per_channel(v)
+                elif isinstance(v, (dict, list)):
+                    out[k] = _q(v)
+                else:
+                    out[k] = v
+            return out
+        if isinstance(node, list):
+            return [_q(v) for v in node]
+        return node
+
+    return _q(params)
+
+
 def dequantize_params(params: Any) -> Any:
     def _dq(leaf):
         return leaf.dequantize() if isinstance(leaf, QTensor) else leaf
@@ -179,3 +218,14 @@ class Calibrator:
 def quant_error_bound(x: jax.Array, scale: jax.Array) -> float:
     """Theoretical round-trip bound: |x - dq(q(x))| <= scale/2 (non-clipped)."""
     return float(jnp.max(scale) / 2.0)
+
+
+# The PTQ acceptance gate shared by the serving bench and the test suite:
+# max|logit_float - logit_int8| <= PTQ_REL_TOL * max|logit_float| + PTQ_ABS_TOL
+PTQ_REL_TOL = 0.1
+PTQ_ABS_TOL = 0.05
+
+
+def ptq_tolerance(float_logit_scale: float) -> float:
+    """Calibration tolerance on int8 logit error, given max|float logits|."""
+    return PTQ_REL_TOL * float(float_logit_scale) + PTQ_ABS_TOL

@@ -1,0 +1,334 @@
+"""ViTA control program (Sec. IV): one datapath, per-model schedules.
+
+The paper's headline claim is that a single fixed PE configuration serves
+ViT, DeiT and Swin "with changes solely in our control logic".  This module
+is that control logic for the JAX/Pallas reproduction: a *compiler* from a
+`core.perfmodel.VisionModelSpec` (the same stage descriptions the analytic
+model consumes) to an explicit **phase schedule**, and a single *executor*
+that replays any schedule over the shared batched kernels.
+
+Phases (mirroring the accelerator's phase sequencing):
+
+  * ``embed``  — patch-pixel projection (+ LayerNorm for hierarchical
+                 models, + learned positional embedding for columnar ones)
+  * ``msa``    — LN -> per-head MSA -> concat projection -> residual.
+                 Global MSA runs the `(batch, head)`-grid `vita_msa`
+                 kernel; windowed/shifted W-MSA runs the SAME grid with
+                 windows folded into the batch axis, plus relative position
+                 bias and the shifted-window region mask
+  * ``mlp``    — LN -> inter-layer fused MLP -> residual
+  * ``merge``  — Swin patch merging (2x2 concat -> LN -> linear)
+  * ``head``   — final LN -> mean pool -> classifier
+
+Models (`models/vit.py`, `models/swin.py`) no longer own forward loops:
+they emit a spec, `compile_schedule` turns it into phases, and
+`run_schedule` executes — float through the Pallas/XLA ops, or int8 PTQ
+when the params are `QTensor`s and a calibrator observer is attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.perfmodel import VisionModelSpec
+from repro.core.quant import INT8_MAX, QTensor
+from repro.kernels import ops
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Schedule IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One control-program step.  ``path`` addresses the param subtree the
+    phase reads; ``site`` prefixes its activation-calibration entries."""
+
+    kind: str                      # embed | msa | mlp | merge | head
+    path: Tuple[Any, ...]
+    site: str
+    grid: Tuple[int, int]          # (h, w) token grid at phase input
+    heads: int = 0                 # descriptive (execution reads wq shape)
+    window: int = 0                # 0 -> global MSA
+    shift: int = 0                 # shifted-window offset (W-MSA odd blocks)
+    pos_embed: bool = False        # embed: add learned positional embedding
+    norm: bool = False             # embed: LayerNorm after projection
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    name: str
+    image: int
+    patch: int
+    n_classes: int
+    phases: Tuple[Phase, ...]
+    backend: Optional[str] = None
+
+    def counts(self) -> dict:
+        out: dict = {}
+        for p in self.phases:
+            out[p.kind] = out.get(p.kind, 0) + 1
+        return out
+
+
+def compile_schedule(spec: VisionModelSpec, *, n_classes: int,
+                     backend: Optional[str] = None,
+                     hierarchical: Optional[bool] = None) -> Schedule:
+    """Compile a model spec into the phase list the executor replays.
+
+    ``hierarchical`` selects the Swin-style layout (windowed MSA with
+    relative position bias, ``stages/blocks`` param paths, patch merging);
+    by default it is inferred from the spec (multiple stages, windowed
+    stages, or patch merging present).
+    """
+    if hierarchical is None:
+        hierarchical = (len(spec.stages) > 1
+                        or any(s.n_windows > 1 for s in spec.stages)
+                        or any(s.patch_merging for s in spec.stages))
+    img_h, img_w, _ = spec.image
+    assert img_h == img_w, "control program assumes square images"
+    side = img_h // spec.patch
+    phases = [Phase(kind="embed", path=(), site="patch_embed",
+                    grid=(side, side), pos_embed=not hierarchical,
+                    norm=hierarchical)]
+    flat_layer = 0
+    for s_i, st in enumerate(spec.stages):
+        exp_side = int(math.isqrt(st.tokens * st.n_windows))
+        assert exp_side == side, \
+            f"stage {s_i}: token grid {exp_side} != tracked side {side}"
+        window = int(math.isqrt(st.tokens)) if hierarchical else 0
+        if window:
+            assert side % window == 0, \
+                f"stage {s_i}: side {side} not divisible by window {window}"
+        for b_i in range(st.layers):
+            if hierarchical:
+                path = ("stages", s_i, "blocks", b_i)
+                site = f"s{s_i}.b{b_i}"
+            else:
+                path = ("layers", flat_layer)
+                site = f"l{flat_layer}"
+                flat_layer += 1
+            # Swin alternates plain and shifted windows; with a single
+            # window the shift is a no-op and is elided (standard Swin).
+            shift = (window // 2 if window and b_i % 2 == 1
+                     and st.n_windows > 1 else 0)
+            phases.append(Phase(kind="msa", path=path, site=site,
+                                grid=(side, side), heads=st.heads,
+                                window=window, shift=shift))
+            phases.append(Phase(kind="mlp", path=path, site=site,
+                                grid=(side, side)))
+        if st.patch_merging:
+            phases.append(Phase(kind="merge", path=("stages", s_i),
+                                site=f"s{s_i}.merge", grid=(side, side)))
+            side //= 2
+    phases.append(Phase(kind="head", path=(), site="head",
+                        grid=(side, side)))
+    return Schedule(name=spec.name, image=img_h, patch=spec.patch,
+                    n_classes=n_classes, phases=tuple(phases),
+                    backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Window geometry (shared by the executor and the Swin reference path)
+# ---------------------------------------------------------------------------
+
+
+def window_partition(x: jax.Array, win: int) -> jax.Array:
+    """(B, H, W, C) -> (B * nW, win*win, C); window id = index % nW."""
+    b, h, w, c = x.shape
+    x = x.reshape(b, h // win, win, w // win, win, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(-1, win * win, c)
+
+
+def window_reverse(xw: jax.Array, win: int, h: int, w: int) -> jax.Array:
+    """Inverse of `window_partition`."""
+    b = xw.shape[0] // ((h // win) * (w // win))
+    x = xw.reshape(b, h // win, w // win, win, win, -1)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h, w, -1)
+
+
+@functools.lru_cache(maxsize=None)
+def rel_pos_index(win: int) -> np.ndarray:
+    """(n, n) gather indices into the (2*win-1)^2 relative-bias table."""
+    coords = np.stack(np.meshgrid(np.arange(win), np.arange(win),
+                                  indexing="ij")).reshape(2, -1)
+    rel = coords[:, :, None] - coords[:, None, :]          # (2, n, n)
+    rel = rel.transpose(1, 2, 0) + (win - 1)
+    return (rel[..., 0] * (2 * win - 1) + rel[..., 1]).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def shifted_window_mask(grid_h: int, grid_w: int, win: int,
+                        shift: int) -> np.ndarray:
+    """(nW, n, n) additive mask (0 / NEG_INF) for shifted-window attention.
+
+    After a (-shift, -shift) roll, tokens from opposite image edges share a
+    window; the standard Swin region labelling keeps attention within the
+    9 contiguous source regions.  shift == 0 yields an all-zero mask (the
+    kernel's windowed mode always takes a mask, so unshifted blocks pass
+    zeros).
+    """
+    n_w = (grid_h // win) * (grid_w // win)
+    n = win * win
+    if shift == 0:
+        return np.zeros((n_w, n, n), np.float32)
+    ids = np.zeros((grid_h, grid_w), np.int32)
+    cnt = 0
+    for hs in (slice(0, -win), slice(-win, -shift), slice(-shift, None)):
+        for ws in (slice(0, -win), slice(-win, -shift), slice(-shift, None)):
+            ids[hs, ws] = cnt
+            cnt += 1
+    idw = ids.reshape(grid_h // win, win, grid_w // win, win)
+    idw = idw.transpose(0, 2, 1, 3).reshape(n_w, n)
+    same = idw[:, :, None] == idw[:, None, :]
+    return np.where(same, 0.0, NEG_INF).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+def _subtree(params: Any, path: Tuple[Any, ...]) -> Any:
+    node = params
+    for k in path:
+        node = node[k]
+    return node
+
+
+def _matmul(x: jax.Array, w: Any, obs, site: str) -> jax.Array:
+    """matmul with optional int8 quantization (w: array or QTensor)."""
+    if isinstance(w, QTensor):
+        scale = obs.observe(site, x)
+        xq = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX
+                      ).astype(jnp.int8)
+        acc = jax.lax.dot_general(
+            xq, w.values, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return acc.astype(jnp.float32) * (scale * w.scale)
+    return x @ w
+
+
+def _head_scale(wq: QTensor) -> jax.Array:
+    """Per-(head, out-channel) scale (H, 1, Dh) -> the (H, Dh) kernel form."""
+    h, _, dh = wq.values.shape
+    return wq.scale.reshape(h, dh)
+
+
+def _per_head_msa(bp: Any, z: jax.Array, obs, site: str,
+                  quantized: bool, backend: Optional[str],
+                  bias: Optional[jax.Array],
+                  mask: Optional[jax.Array]) -> jax.Array:
+    """Per-head MSA over a (B', N, C) activation through the shared
+    `(batch, head)` grid; B' is images, or images * windows in W-MSA mode.
+    Returns (B', N, C) with heads merged (pre concat-projection)."""
+    b, n, c = z.shape
+    if quantized:
+        scale = obs.observe(f"{site}.qkv_in", z)
+        zq = jnp.clip(jnp.round(z / scale), -INT8_MAX, INT8_MAX
+                      ).astype(jnp.int8)
+        sa = ops.vita_msa_int8(
+            zq, bp["wq"].values, bp["wk"].values, bp["wv"].values,
+            scale, _head_scale(bp["wq"]), _head_scale(bp["wk"]),
+            _head_scale(bp["wv"]), bias, mask, backend=backend)
+    else:
+        sa = ops.vita_msa_batched(z, bp["wq"], bp["wk"], bp["wv"],
+                                  bias, mask, backend=backend)
+    return sa.transpose(0, 2, 1, 3).reshape(b, n, c).astype(z.dtype)
+
+
+def _msa_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
+               backend: Optional[str]) -> jax.Array:
+    b, t, c = x.shape
+    z = ops.layer_norm(x, bp["ln1_w"], bp["ln1_b"])
+    if ph.window:
+        gh, gw = ph.grid
+        zs = z.reshape(b, gh, gw, c)
+        if ph.shift:
+            zs = jnp.roll(zs, (-ph.shift, -ph.shift), axis=(1, 2))
+        zw = window_partition(zs, ph.window)            # (B*nW, n, C)
+        idx = jnp.asarray(rel_pos_index(ph.window))
+        bias = bp["rel_bias"][idx].transpose(2, 0, 1)   # (H, n, n)
+        mask = jnp.asarray(shifted_window_mask(gh, gw, ph.window, ph.shift))
+        sa = _per_head_msa(bp, zw, obs, ph.site, quantized,
+                           backend, bias, mask)
+        sa = window_reverse(sa, ph.window, gh, gw)
+        if ph.shift:
+            sa = jnp.roll(sa, (ph.shift, ph.shift), axis=(1, 2))
+        sa = sa.reshape(b, t, c)
+    else:
+        sa = _per_head_msa(bp, z, obs, ph.site, quantized,
+                           backend, None, None)
+    return x + _matmul(sa, bp["w_msa"], obs, f"{ph.site}.w_msa")
+
+
+def _mlp_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
+               backend: Optional[str]) -> jax.Array:
+    h = ops.layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+    if quantized:
+        hid = jax.nn.gelu(_matmul(h, bp["w_up"], obs, f"{ph.site}.w_up")
+                          + bp["b_up"])
+        y = _matmul(hid, bp["w_down"], obs, f"{ph.site}.w_down") \
+            + bp["b_down"]
+    else:
+        y = ops.mlp(h, bp["w_up"], bp["w_down"], bp["b_up"], bp["b_down"],
+                    activation="gelu", backend=backend)
+    return x + y
+
+
+def _merge_phase(ph: Phase, sp: Any, x: jax.Array, obs) -> jax.Array:
+    """Swin patch merging: 2x2 neighbourhood concat -> LN -> linear."""
+    b, t, c = x.shape
+    gh, gw = ph.grid
+    xs = x.reshape(b, gh // 2, 2, gw // 2, 2, c)
+    xs = xs.transpose(0, 1, 3, 2, 4, 5).reshape(b, gh // 2, gw // 2, 4 * c)
+    xs = ops.layer_norm(xs, sp["merge_ln_w"], sp["merge_ln_b"])
+    xs = _matmul(xs, sp["merge_w"], obs, ph.site)
+    return xs.reshape(b, (gh // 2) * (gw // 2), xs.shape[-1])
+
+
+def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
+                 observer=None) -> jax.Array:
+    """Replay a compiled schedule: patches (B, N, P*P*3) -> logits.
+
+    Float params run through the Pallas/XLA batched ops; `QTensor` params
+    plus a `core.quant.Calibrator` observer run the int8 PTQ path (the
+    observer records activation amax when calibrating, returns frozen
+    scales at inference).
+    """
+    obs = observer
+    quantized = isinstance(params["patch_embed"], QTensor)
+    x = patches
+    for ph in sched.phases:
+        if ph.kind == "embed":
+            x = _matmul(x, params["patch_embed"], obs, ph.site)
+            if ph.norm:
+                x = ops.layer_norm(x, params["pe_ln_w"], params["pe_ln_b"])
+            if ph.pos_embed:
+                pos = params["pos_embed"]
+                x = x + (pos.dequantize()
+                         if isinstance(pos, QTensor) else pos)[None]
+        elif ph.kind == "msa":
+            x = _msa_phase(ph, _subtree(params, ph.path), x, obs,
+                           quantized, sched.backend)
+        elif ph.kind == "mlp":
+            x = _mlp_phase(ph, _subtree(params, ph.path), x, obs,
+                           quantized, sched.backend)
+        elif ph.kind == "merge":
+            x = _merge_phase(ph, _subtree(params, ph.path), x, obs)
+        elif ph.kind == "head":
+            x = ops.layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+            x = _matmul(jnp.mean(x, axis=1), params["head"], obs, ph.site)
+        else:
+            raise ValueError(f"unknown phase kind {ph.kind!r}")
+    return x

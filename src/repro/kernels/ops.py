@@ -137,21 +137,29 @@ def vita_msa(z, wq, wk, wv, *, backend: Optional[str] = None):
     return _vita_msa_pallas(z, wq, wk, wv, interpret=_interp())
 
 
-def vita_msa_batched(z, wq, wk, wv, *, backend: Optional[str] = None):
-    """Whole-batch per-head MSA: (B, N, D) -> (B, H, N, Dh), one kernel."""
+def vita_msa_batched(z, wq, wk, wv, bias=None, mask=None, *,
+                     backend: Optional[str] = None):
+    """Whole-batch per-head MSA: (B, N, D) -> (B, H, N, Dh), one kernel.
+
+    ``bias`` (H, N, N) / ``mask`` (nW, N, N) select the windowed (Swin)
+    mode — windows folded into the batch axis by the control program.
+    """
     if get_backend(backend) == "xla":
-        return ref.vita_msa_batched_ref(z, wq, wk, wv)
-    return _vita_msa_batched_pallas(z, wq, wk, wv, interpret=_interp())
+        return ref.vita_msa_batched_ref(z, wq, wk, wv, bias, mask)
+    return _vita_msa_batched_pallas(z, wq, wk, wv, bias, mask,
+                                    interpret=_interp())
 
 
 def vita_msa_int8(z_q, wq_q, wk_q, wv_q, x_scale, wq_scale, wk_scale,
-                  wv_scale, *, backend: Optional[str] = None):
+                  wv_scale, bias=None, mask=None, *,
+                  backend: Optional[str] = None):
     """int8 PTQ per-head MSA: (B, N, D) int8 -> (B, H, N, Dh) float32."""
     if get_backend(backend) == "xla":
         return ref.vita_msa_int8_ref(z_q, wq_q, wk_q, wv_q, x_scale,
-                                     wq_scale, wk_scale, wv_scale)
+                                     wq_scale, wk_scale, wv_scale,
+                                     bias, mask)
     return _vita_msa_int8_pallas(z_q, wq_q, wk_q, wv_q, x_scale,
-                                 wq_scale, wk_scale, wv_scale,
+                                 wq_scale, wk_scale, wv_scale, bias, mask,
                                  interpret=_interp())
 
 
@@ -166,6 +174,18 @@ def linear_recurrence(a, b, *, backend: Optional[str] = None,
         _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
         return h
     return _rglru_pallas(a, b, chunk=chunk, interpret=_interp())
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    """fp32-accumulated LayerNorm — the single definition shared by the
+    model layers and the schedule executor (ViTA's dedicated LN unit)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
 
 
 def _largest_divisor(n: int, target: int) -> int:

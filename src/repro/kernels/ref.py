@@ -124,16 +124,36 @@ def vita_msa_ref(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
     return jnp.einsum("hnm,hme->hne", p, v).astype(z.dtype)
 
 
+def _window_extra(s: jax.Array, bias: Optional[jax.Array],
+                  mask: Optional[jax.Array]) -> jax.Array:
+    """Add rel-pos bias (H, N, N) and per-window mask (nW, N, N) to scores
+    (BW, H, N, N); window identity of batch row i is i % nW."""
+    if bias is not None:
+        s = s + bias.astype(s.dtype)[None]
+    if mask is not None:
+        bw = s.shape[0]
+        n_w = mask.shape[0]
+        tiled = jnp.tile(mask.astype(s.dtype), (bw // n_w, 1, 1))
+        s = s + tiled[:, None]
+    return s
+
+
 def vita_msa_batched_ref(z: jax.Array, wq: jax.Array, wk: jax.Array,
-                         wv: jax.Array, *, acc_dtype=jnp.float32
-                         ) -> jax.Array:
-    """Batched oracle: z (B, N, D); wq/wk/wv (H, D, Dh) -> (B, H, N, Dh)."""
+                         wv: jax.Array, bias: Optional[jax.Array] = None,
+                         mask: Optional[jax.Array] = None,
+                         *, acc_dtype=jnp.float32) -> jax.Array:
+    """Batched oracle: z (B, N, D); wq/wk/wv (H, D, Dh) -> (B, H, N, Dh).
+
+    Windowed mode (Swin through the same batched path): windows are folded
+    into the batch axis, ``bias``/``mask`` as in `vita_msa.vita_msa_batched`.
+    """
     h, d, dh = wq.shape
     zf = z.astype(acc_dtype)
     q = jnp.einsum("bnd,hde->bhne", zf, wq.astype(acc_dtype))
     k = jnp.einsum("bnd,hde->bhne", zf, wk.astype(acc_dtype))
     v = jnp.einsum("bnd,hde->bhne", zf, wv.astype(acc_dtype))
     s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
+    s = _window_extra(s, bias, mask)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhnm,bhme->bhne", p, v).astype(z.dtype)
 
@@ -141,13 +161,16 @@ def vita_msa_batched_ref(z: jax.Array, wq: jax.Array, wk: jax.Array,
 def vita_msa_int8_ref(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
                       wv_q: jax.Array, x_scale: jax.Array,
                       wq_scale: jax.Array, wk_scale: jax.Array,
-                      wv_scale: jax.Array) -> jax.Array:
+                      wv_scale: jax.Array,
+                      bias: Optional[jax.Array] = None,
+                      mask: Optional[jax.Array] = None) -> jax.Array:
     """int8 per-head MSA oracle.
 
     z_q: (B, N, D) int8; w*_q: (H, D, Dh) int8; x_scale scalar;
     w*_scale: (H, Dh).  Projections accumulate in int32 then requantize to
     fp32 (activation x per-(head, out-channel) weight scale); softmax and
     the attention-V product stay fp32 — ViTA's high-precision softmax unit.
+    ``bias``/``mask`` (windowed Swin mode) are added in fp32 pre-softmax.
     Returns (B, H, N, Dh) float32.
     """
     h, d, dh = wq_q.shape
@@ -163,6 +186,7 @@ def vita_msa_int8_ref(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
     k = proj(wk_q, wk_scale)
     v = proj(wv_q, wv_scale)
     s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
+    s = _window_extra(s, bias, mask)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhnm,bhme->bhne", p, v)
 

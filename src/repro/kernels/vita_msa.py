@@ -25,6 +25,17 @@ activation x per-(head, out-channel) requantization of `int8_matmul`, and
 the softmax/AV stage kept in fp32 (the paper's dedicated high-precision
 softmax unit).
 
+Windowed (Swin) attention runs on the SAME grid — ViTA's Sec. IV control
+argument that W-MSA is "the regular MSA performed repeatedly over these
+windows": the control program folds the windows into the batch axis, so the
+grid becomes (batch * n_windows, heads) with no kernel change to the
+dataflow.  Two per-window additive terms ride along:
+
+  * ``bias`` (H, n, n)   — relative position bias, selected by the head
+    grid index (same for every window);
+  * ``mask`` (nW, n, n)  — shifted-window region mask (0 / -1e30),
+    selected by ``i % nW`` (window identity of batch-axis step i).
+
 For LM-scale sequence lengths, `head_attention.flash_attention` is the
 streaming generalization (row-granular online softmax).
 """
@@ -41,9 +52,11 @@ from jax.experimental.pallas import tpu as pltpu  # noqa: F401 (compat)
 from . import compat
 
 
-def _attend(q, k, v, o_ref, *, scale: float, out_dtype):
+def _attend(q, k, v, o_ref, *, scale: float, out_dtype, extra=None):
     """Engine 2: QK^T (PE block 4) -> softmax -> S.V (PE block 5)."""
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if extra is not None:
+        s = s + extra
     s = s - jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
@@ -61,31 +74,62 @@ def _vita_msa_kernel(z_ref, wq_ref, wk_ref, wv_ref, o_ref, *, scale: float):
     _attend(q, k, v, o_ref, scale=scale, out_dtype=z.dtype)
 
 
+def _vita_msa_win_kernel(z_ref, wq_ref, wk_ref, wv_ref, b_ref, m_ref,
+                         o_ref, *, scale: float):
+    z = z_ref[0]
+    q = jnp.dot(z, wq_ref[0], preferred_element_type=jnp.float32)
+    k = jnp.dot(z, wk_ref[0], preferred_element_type=jnp.float32)
+    v = jnp.dot(z, wv_ref[0], preferred_element_type=jnp.float32)
+    _attend(q, k, v, o_ref, scale=scale, out_dtype=z.dtype,
+            extra=b_ref[0] + m_ref[0])
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def vita_msa_batched(z: jax.Array, wq: jax.Array, wk: jax.Array,
-                     wv: jax.Array, *, interpret: bool = False) -> jax.Array:
+                     wv: jax.Array, bias: jax.Array = None,
+                     mask: jax.Array = None, *,
+                     interpret: bool = False) -> jax.Array:
     """z: (B, N, D); wq/wk/wv: (H, D, Dh) -> (B, H, N, Dh).
 
     One pallas_call covers the whole batch: grid (B, H), z stationary per
     image, head weights double-buffered across the batch loop.
+
+    Windowed (Swin) mode: the caller folds windows into the batch axis
+    (B = images * nW) and passes ``bias`` (H, N, N) — per-head relative
+    position bias — and ``mask`` (nW, N, N) — additive shifted-window region
+    mask, window identity recovered as ``i % nW``.  Both or neither.
     """
+    if (bias is None) != (mask is None):
+        raise ValueError("windowed mode needs both bias and mask "
+                         "(pass a zero mask for unshifted blocks)")
     b, n, d = z.shape
     h, _, dh = wq.shape
-    kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5)
     w_spec = pl.BlockSpec((1, d, dh), lambda i, j: (j, 0, 0))
+    z_spec = pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0))   # z stationary
+    if bias is None:
+        kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5)
+        in_specs = [z_spec, w_spec, w_spec, w_spec]
+        operands = (z, wq, wk, wv)
+    else:
+        n_w = mask.shape[0]
+        kernel = functools.partial(_vita_msa_win_kernel, scale=dh ** -0.5)
+        in_specs = [
+            z_spec, w_spec, w_spec, w_spec,
+            pl.BlockSpec((1, n, n), lambda i, j: (j, 0, 0)),       # rel bias
+            pl.BlockSpec((1, n, n), lambda i, j: (i % n_w, 0, 0)),  # region
+        ]
+        operands = (z, wq, wk, wv, bias.astype(jnp.float32),
+                    mask.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(b, h),
-        in_specs=[
-            pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),   # z stationary
-            w_spec, w_spec, w_spec,                            # head weights
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, n, dh), z.dtype),
         compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(z, wq, wk, wv)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -103,56 +147,91 @@ def vita_msa(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
 # ---------------------------------------------------------------------------
 
 
+def _int8_proj(z, w_ref, ws_ref, xs):
+    # MXU-native int8 x int8 -> int32 with the requant fused in VMEM.
+    acc = jax.lax.dot_general(
+        z, w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (xs * ws_ref[0])
+
+
 def _vita_msa_int8_kernel(z_ref, wq_ref, wk_ref, wv_ref, xs_ref,
                           qs_ref, ks_ref, vs_ref, o_ref, *, scale: float):
     z = z_ref[0]                         # (N, D) int8
     xs = xs_ref[0, 0]                    # per-tensor activation scale
-
-    def proj(w_ref, ws_ref):
-        # MXU-native int8 x int8 -> int32 with the requant fused in VMEM.
-        acc = jax.lax.dot_general(
-            z, w_ref[0], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        return acc.astype(jnp.float32) * (xs * ws_ref[0])
-
-    q = proj(wq_ref, qs_ref)
-    k = proj(wk_ref, ks_ref)
-    v = proj(wv_ref, vs_ref)
+    q = _int8_proj(z, wq_ref, qs_ref, xs)
+    k = _int8_proj(z, wk_ref, ks_ref, xs)
+    v = _int8_proj(z, wv_ref, vs_ref, xs)
     _attend(q, k, v, o_ref, scale=scale, out_dtype=jnp.float32)
+
+
+def _vita_msa_int8_win_kernel(z_ref, wq_ref, wk_ref, wv_ref, xs_ref,
+                              qs_ref, ks_ref, vs_ref, b_ref, m_ref,
+                              o_ref, *, scale: float):
+    z = z_ref[0]
+    xs = xs_ref[0, 0]
+    q = _int8_proj(z, wq_ref, qs_ref, xs)
+    k = _int8_proj(z, wk_ref, ks_ref, xs)
+    v = _int8_proj(z, wv_ref, vs_ref, xs)
+    # Bias/mask are added after the requant, in the fp32 softmax stage —
+    # ViTA keeps softmax inputs high precision (dedicated softmax unit).
+    _attend(q, k, v, o_ref, scale=scale, out_dtype=jnp.float32,
+            extra=b_ref[0] + m_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def vita_msa_int8(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
                   wv_q: jax.Array, x_scale: jax.Array,
                   wq_scale: jax.Array, wk_scale: jax.Array,
-                  wv_scale: jax.Array, *,
+                  wv_scale: jax.Array, bias: jax.Array = None,
+                  mask: jax.Array = None, *,
                   interpret: bool = False) -> jax.Array:
     """Fused int8 per-head MSA over the whole batch.
 
     z_q: (B, N, D) int8; w*_q: (H, D, Dh) int8; x_scale: scalar float32;
     w*_scale: (H, Dh) per-(head, out-channel) float32.  Returns
     (B, H, N, Dh) float32 (attention runs in fp32 after the requant).
+
+    Windowed mode mirrors `vita_msa_batched`: windows folded into the batch
+    axis, ``bias`` (H, N, N) + ``mask`` (nW, N, N) added in fp32 before the
+    softmax.
     """
+    if (bias is None) != (mask is None):
+        raise ValueError("windowed mode needs both bias and mask")
     b, n, d = z_q.shape
     h, _, dh = wq_q.shape
     x_scale = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
-    kernel = functools.partial(_vita_msa_int8_kernel, scale=dh ** -0.5)
     w_spec = pl.BlockSpec((1, d, dh), lambda i, j: (j, 0, 0))
     s_spec = pl.BlockSpec((1, dh), lambda i, j: (j, 0))
+    base_specs = [
+        pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),       # z stationary
+        w_spec, w_spec, w_spec,
+        pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        s_spec, s_spec, s_spec,
+    ]
+    scales = (wq_scale.astype(jnp.float32), wk_scale.astype(jnp.float32),
+              wv_scale.astype(jnp.float32))
+    if bias is None:
+        kernel = functools.partial(_vita_msa_int8_kernel, scale=dh ** -0.5)
+        in_specs = base_specs
+        operands = (z_q, wq_q, wk_q, wv_q, x_scale) + scales
+    else:
+        n_w = mask.shape[0]
+        kernel = functools.partial(_vita_msa_int8_win_kernel,
+                                   scale=dh ** -0.5)
+        in_specs = base_specs + [
+            pl.BlockSpec((1, n, n), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1, n, n), lambda i, j: (i % n_w, 0, 0)),
+        ]
+        operands = (z_q, wq_q, wk_q, wv_q, x_scale) + scales + (
+            bias.astype(jnp.float32), mask.astype(jnp.float32))
     return pl.pallas_call(
         kernel,
         grid=(b, h),
-        in_specs=[
-            pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),   # z stationary
-            w_spec, w_spec, w_spec,
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            s_spec, s_spec, s_spec,
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, n, dh), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, h, n, dh), jnp.float32),
         compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(z_q, wq_q, wk_q, wv_q, x_scale,
-      wq_scale.astype(jnp.float32), wk_scale.astype(jnp.float32),
-      wv_scale.astype(jnp.float32))
+    )(*operands)

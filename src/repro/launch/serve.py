@@ -5,14 +5,16 @@ end-to-end driver.  A fixed pool of B decode slots runs lock-step decode
 steps (one fused decode_step over the whole batch — the TPU-efficient
 regime); finished slots are refilled from the request queue with a prefill.
 
-Vision serving (ViT/DeiT forward passes, float or ViTA's int8 PTQ mode)
-lives in `vision_serve.py` — pass ``--vision`` to route there:
+Vision serving (any model registered in `models.vision_registry` —
+ViT/DeiT/Swin, float or ViTA's int8 PTQ mode, all through the one batched
+control-program pipeline) lives in `vision_serve.py` — pass ``--vision``
+to route there:
 
 Usage (CPU examples):
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \
       --requests 16 --batch 4 --max-new 32
-  PYTHONPATH=src python -m repro.launch.serve --vision --requests 32 \
-      --buckets 1,2,4,8 --mode both
+  PYTHONPATH=src python -m repro.launch.serve --vision --model swin_t \
+      --requests 32 --buckets 1,2,4,8 --mode both
 """
 
 from __future__ import annotations

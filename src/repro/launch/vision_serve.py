@@ -1,13 +1,16 @@
-"""VisionServer — micro-batching driver for batched ViT/DeiT inference.
+"""VisionServer — micro-batching driver for every registered vision model.
 
 The LM side of `launch/serve.py` does slot-based continuous batching for
 autoregressive decode; vision inference is a single forward pass per
 request, so the serving shape is different: requests queue up, the server
 drains them in micro-batches, pads each micro-batch up to the nearest
 *batch bucket* (so only a handful of XLA programs are ever compiled), and
-runs the whole bucket through ONE batched forward — which on the Pallas
-path is one `(batch, head)`-grid `vita_msa` kernel per layer, ViTA's
-head-level pipeline swept across the batch.
+runs the whole bucket through ONE batched forward.
+
+The forward is model-agnostic: any config in `models.vision_registry`
+(ViT, DeiT, Swin) compiles to a `core.schedule` control program replayed
+over the shared batched kernels — plain MSA on the `(batch, head)` Pallas
+grid, W-MSA on the same grid with windows folded into the batch axis.
 
 Modes:
   * ``float`` — the fp32/bf16 path through the batched Pallas ops;
@@ -15,8 +18,9 @@ Modes:
     weights + calibrated activation scales through the fused int8 MSA /
     quantized matmul path.
 
-Usage (CPU example):
-  PYTHONPATH=src python -m repro.launch.serve --vision \
+Usage (CPU examples):
+  PYTHONPATH=src python -m repro.launch.serve --vision --list-models
+  PYTHONPATH=src python -m repro.launch.serve --vision --model swin_t \
       --requests 32 --buckets 1,2,4,8 --mode both
 """
 
@@ -33,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import Calibrator
-from repro.models import vit
+from repro.models import vision_registry, vit
 
 
 class VisionRequest:
@@ -54,15 +58,18 @@ class VisionRequest:
 
 
 class VisionServer:
-    """Queue + pad-to-bucket micro-batching over a ViT/DeiT forward.
+    """Queue + pad-to-bucket micro-batching over any registered model.
 
-    ``buckets`` are the allowed batch sizes (ascending).  A drain step takes
-    up to ``buckets[-1]`` queued requests, rounds up to the smallest bucket
-    that fits, pads with zero images, and runs one batched forward — one
-    compiled program per (bucket, mode), cached across the server's life.
+    ``cfg`` may be any config the vision registry understands (ViT/DeiT's
+    `ViTConfig` or Swin's `SwinConfig`); the matching schedule-driven
+    forward is resolved per family.  ``buckets`` are the allowed batch
+    sizes (ascending).  A drain step takes up to ``buckets[-1]`` queued
+    requests, rounds up to the smallest bucket that fits, pads with zero
+    images, and runs one batched forward — one compiled program per
+    (bucket, mode), cached across the server's life.
     """
 
-    def __init__(self, cfg: vit.ViTConfig, params, *,
+    def __init__(self, cfg, params, *,
                  qparams=None, calibrator: Optional[Calibrator] = None,
                  mode: str = "float",
                  buckets: Sequence[int] = (1, 2, 4, 8)):
@@ -84,16 +91,17 @@ class VisionServer:
         self.n_batches = 0
         self.n_padded = 0
         self._rid = 0
+        model_fwd = vision_registry.forward_fn(cfg)
         if self.mode == "int8":
             qp, frozen_cal = self.qparams, self.calibrator
 
             def _fwd(patches):
-                return vit.forward(qp, patches, cfg, observer=frozen_cal)
+                return model_fwd(qp, patches, cfg, observer=frozen_cal)
         else:
             p = self.params
 
             def _fwd(patches):
-                return vit.forward(p, patches, cfg)
+                return model_fwd(p, patches, cfg)
         # jit's own shape-keyed cache gives one compiled program per bucket.
         self._forward = jax.jit(_fwd)
 
@@ -177,14 +185,19 @@ class VisionServer:
 # ---------------------------------------------------------------------------
 
 
-def calibrate(qparams, cfg: vit.ViTConfig, images: np.ndarray,
+def calibrate(qparams, cfg, images: np.ndarray,
               n_batches: int = 4) -> Calibrator:
-    """Run calibration forwards and freeze the activation scales."""
+    """Run calibration forwards and freeze the activation scales.
+
+    Model-agnostic: the forward is resolved from the config's family, so
+    Swin calibrates through the same windowed int8 path it serves with.
+    """
+    fwd = vision_registry.forward_fn(cfg)
     cal = Calibrator()
     for chunk in np.array_split(images, n_batches):
         if len(chunk) == 0:
             continue
-        vit.forward(qparams, vit.extract_patches(
+        fwd(qparams, vit.extract_patches(
             jnp.asarray(chunk), cfg.patch), cfg, observer=cal)
     cal.freeze()
     return cal
@@ -193,41 +206,30 @@ def calibrate(qparams, cfg: vit.ViTConfig, images: np.ndarray,
 def build_edge_vit(image: int = 32, patch: int = 8, dim: int = 96,
                    heads: int = 4, layers: int = 4, n_classes: int = 10,
                    backend: Optional[str] = None) -> vit.ViTConfig:
+    """Custom edge-ViT builder (the registry's ``vit_edge`` covers the
+    default geometry; this remains for tests and ad-hoc configs)."""
     return vit.ViTConfig(name=f"vit_edge_{image}", image=image, patch=patch,
                          dim=dim, heads=heads, layers=layers,
                          n_classes=n_classes, backend=backend)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser(prog="vision_serve")
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--buckets", default="1,2,4,8")
-    ap.add_argument("--mode", choices=("float", "int8", "both"),
-                    default="both")
-    ap.add_argument("--backend", choices=("xla", "pallas"), default=None)
-    ap.add_argument("--image", type=int, default=32)
-    ap.add_argument("--patch", type=int, default=8)
-    ap.add_argument("--dim", type=int, default=96)
-    ap.add_argument("--heads", type=int, default=4)
-    ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json-out", default=None,
-                    help="write stats as a BENCH_*.json-style record")
-    args = ap.parse_args(argv)
-
-    buckets = tuple(int(b) for b in args.buckets.split(","))
-    cfg = build_edge_vit(args.image, args.patch, args.dim, args.heads,
-                         args.layers, backend=args.backend)
-    params = vit.init_params(jax.random.PRNGKey(args.seed), cfg)
-    rng = np.random.default_rng(args.seed)
+def serve_model(cfg, *, requests: int, buckets: Sequence[int],
+                modes: Sequence[str], seed: int = 0, calib_images: int = 8,
+                name: Optional[str] = None) -> List[Dict[str, float]]:
+    """Init params, (optionally) quantize+calibrate, and drain ``requests``
+    random images through a `VisionServer` per mode.  Returns one stats row
+    per mode, tagged ``model`` = registry ``name`` (falling back to the
+    config name — the same join key the bench JSON uses) and ``config`` =
+    the concrete geometry's name."""
+    params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed)
     images = rng.standard_normal(
-        (args.requests, cfg.image, cfg.image, 3)).astype(np.float32)
+        (requests, cfg.image, cfg.image, 3)).astype(np.float32)
 
-    modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     qparams = cal = None
     if "int8" in modes:
-        qparams = vit.quantize_vit(params)
-        cal = calibrate(qparams, cfg, images[:8])
+        qparams = vision_registry.quantize(params)
+        cal = calibrate(qparams, cfg, images[:calib_images])
 
     all_stats = []
     for mode in modes:
@@ -235,6 +237,8 @@ def main(argv=None):
                               mode=mode, buckets=buckets)
         server.submit_many(images)
         stats = server.run()
+        stats["model"] = name or cfg.name
+        stats["config"] = cfg.name
         all_stats.append(stats)
         print(f"[vision-serve] {cfg.name} mode={mode} "
               f"{stats['requests']} reqs in {stats['wall_s']:.2f}s -> "
@@ -242,13 +246,52 @@ def main(argv=None):
               f"p50 {stats['latency_p50_ms']:.1f}ms "
               f"p99 {stats['latency_p99_ms']:.1f}ms "
               f"({stats['batches']} batches, {stats['padded']} padded)")
+    return all_stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="vision_serve",
+        description="Serve a registered vision model (ViT/DeiT/Swin) "
+                    "through the batched ViTA pipeline.")
+    ap.add_argument("--model", default="vit_edge",
+                    choices=vision_registry.list_models(),
+                    help="registered model to serve (see --list-models)")
+    ap.add_argument("--list-models", action="store_true",
+                    help="print the registry and exit")
+    ap.add_argument("--full", action="store_true",
+                    help="use the paper-scale geometry instead of the "
+                         "CPU-friendly reduced one")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--buckets", default="1,2,4,8")
+    ap.add_argument("--mode", choices=("float", "int8", "both"),
+                    default="both")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
+                    help="kernel dispatch override (default: config's)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None,
+                    help="write stats as a BENCH_*.json-style record")
+    args = ap.parse_args(argv)
+
+    if args.list_models:
+        for name in vision_registry.list_models():
+            entry = vision_registry.get(name)
+            print(f"{name:10s} [{entry.family}] {entry.description}")
+        return []
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    cfg = vision_registry.build_cfg(args.model, full=args.full,
+                                    backend=args.backend)
+    modes = ("float", "int8") if args.mode == "both" else (args.mode,)
+    all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
+                            modes=modes, seed=args.seed, name=args.model)
 
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
-            json.dump({"bench": "vision_serve", "model": cfg.name,
-                       "buckets": list(buckets), "runs": all_stats}, f,
-                      indent=2)
+            json.dump({"bench": "vision_serve", "model": args.model,
+                       "config": cfg.name, "buckets": list(buckets),
+                       "runs": all_stats}, f, indent=2)
         print(f"[vision-serve] wrote {args.json_out}")
     return all_stats
 

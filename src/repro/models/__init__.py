@@ -1,6 +1,7 @@
 """Model zoo: LM backbone (all 10 assigned archs) + ViT/DeiT/Swin."""
 
-from . import config, layers, recurrent, swin, transformer, vit, xlstm
+from . import (config, layers, recurrent, swin, transformer, vision_registry,
+               vit, xlstm)
 
 __all__ = ["config", "layers", "transformer", "recurrent", "xlstm", "vit",
-           "swin"]
+           "swin", "vision_registry"]

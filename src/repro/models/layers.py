@@ -55,12 +55,7 @@ def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
 
 def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
                eps: float = 1e-5) -> jax.Array:
-    dt = x.dtype
-    xf = x.astype(jnp.float32)
-    mu = jnp.mean(xf, axis=-1, keepdims=True)
-    var = jnp.var(xf, axis=-1, keepdims=True)
-    y = (xf - mu) * jax.lax.rsqrt(var + eps)
-    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+    return ops.layer_norm(x, w, b, eps)
 
 
 @jax.custom_vjp

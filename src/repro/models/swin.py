@@ -2,21 +2,39 @@
 
 ViTA runs Swin by re-using the same PE configuration with control-logic
 changes only: W-MSA is "the regular MSA performed on N=49 repeatedly over
-these windows" (Sec. IV).  Here each window's attention goes through the
-same per-head fused computation; the MLP uses the fused inter-layer op.
-Includes relative position bias and the shifted-window region masking.
+these windows" (Sec. IV).  This module reproduces that argument in software:
+it owns only the model description (config, params, spec); `forward`
+compiles the config into a `core.schedule.Schedule` and replays it through
+the SAME batched `(batch, head)`-grid kernels as ViT/DeiT — windows folded
+into the batch axis, relative position bias and the shifted-window region
+mask passed to the kernel, the MLP through the fused inter-layer op, and
+patch merging as an explicit schedule phase.
+
+Weights use the per-head `wq/wk/wv (H, D, Dh)` layout of `models/vit.py`,
+so the int8 PTQ path (per-(head, out-channel) weight scales, calibrated
+per-tensor activation scales) covers Swin with no new machinery.  NOTE:
+this layout has no QKV projection bias (reference Swin-T's `attn.qkv.bias`)
+— the shared kernels are bias-free, matching ViTA's datapath.  Models
+trained in-repo are unaffected; a future real-checkpoint loader must
+either fold the bias in as an extra kernel operand or reject biased
+checkpoints (see ROADMAP "Real weights + accuracy").
+
+`reference_forward` keeps a direct dense einsum implementation (no shared
+kernels, no schedule) as the numerical oracle for the scheduled path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import functools
+from typing import Optional, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.core import schedule as sched_lib
+from repro.core.perfmodel import StageSpec, VisionModelSpec
+from repro.core.quant import quantize_vision_params
 from .layers import Params, dense_init, layer_norm
 
 
@@ -38,18 +56,42 @@ class SwinConfig:
     def patch_dim(self) -> int:
         return self.patch * self.patch * 3
 
+    def stage_dim(self, s_i: int) -> int:
+        return self.embed_dim * (2 ** s_i)
 
-def _rel_pos_index(w: int) -> np.ndarray:
-    coords = np.stack(np.meshgrid(np.arange(w), np.arange(w),
-                                  indexing="ij")).reshape(2, -1)
-    rel = coords[:, :, None] - coords[:, None, :]          # (2, N, N)
-    rel = rel.transpose(1, 2, 0) + (w - 1)
-    return (rel[..., 0] * (2 * w - 1) + rel[..., 1]).astype(np.int32)
+    def stage_side(self, s_i: int) -> int:
+        return (self.image // self.patch) // (2 ** s_i)
+
+
+def swin_t(image: int = 224, **kw) -> SwinConfig:
+    """The paper's Swin-T: patch 4, window 7, depths (2,2,6,2)."""
+    return SwinConfig(name=f"swin_t_{image}", image=image, **kw)
+
+
+def swin_edge(image: int = 56, **kw) -> SwinConfig:
+    """CPU-friendly two-stage Swin with real window geometry: stage 0 has
+    a 14x14 grid of 4 shifted 7x7 windows, patch merging, then a 7x7
+    single-window stage — every control-program feature exercised."""
+    kw.setdefault("n_classes", 10)
+    return SwinConfig(name=f"swin_edge_{image}", image=image, patch=4,
+                      embed_dim=48, depths=(2, 2), heads=(3, 6),
+                      window=7, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Init (per-head wq/wk/wv layout — the vita_msa kernel form)
+# ---------------------------------------------------------------------------
 
 
 def init_params(key, cfg: SwinConfig) -> Params:
     dtype = jnp.dtype(cfg.dtype)
     ks = iter(jax.random.split(key, 200))
+
+    def per_head(k, dim, n_heads):
+        dh = dim // n_heads
+        return jnp.stack([dense_init(kk, dim, dh, dtype)
+                          for kk in jax.random.split(k, n_heads)])
+
     params: Params = {
         "patch_embed": dense_init(next(ks), cfg.patch_dim, cfg.embed_dim,
                                   dtype),
@@ -65,8 +107,9 @@ def init_params(key, cfg: SwinConfig) -> Params:
             blocks.append({
                 "ln1_w": jnp.ones((dim,), dtype),
                 "ln1_b": jnp.zeros((dim,), dtype),
-                "w_qkv": dense_init(next(ks), dim, 3 * dim, dtype),
-                "b_qkv": jnp.zeros((3 * dim,), dtype),
+                "wq": per_head(next(ks), dim, n_heads),
+                "wk": per_head(next(ks), dim, n_heads),
+                "wv": per_head(next(ks), dim, n_heads),
                 "w_msa": dense_init(next(ks), dim, dim, dtype),
                 "rel_bias": (jax.random.normal(
                     next(ks), ((2 * cfg.window - 1) ** 2, n_heads)) * 0.02
@@ -92,86 +135,106 @@ def init_params(key, cfg: SwinConfig) -> Params:
     return params
 
 
-def _window_partition(x: jax.Array, w: int) -> jax.Array:
-    b, h, wd, c = x.shape
-    x = x.reshape(b, h // w, w, wd // w, w, c)
-    return x.transpose(0, 1, 3, 2, 4, 5).reshape(-1, w * w, c)
+# ---------------------------------------------------------------------------
+# Spec + schedule emission (the control-program interface)
+# ---------------------------------------------------------------------------
 
 
-def _window_reverse(xw: jax.Array, w: int, h: int, wd: int) -> jax.Array:
-    b = xw.shape[0] // ((h // w) * (wd // w))
-    x = xw.reshape(b, h // w, wd // w, w, w, -1)
-    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h, wd, -1)
+def to_spec(cfg: SwinConfig) -> VisionModelSpec:
+    """Describe the config in the perfmodel's stage form (the spec both the
+    analytic ViTA model and the schedule compiler consume)."""
+    stages = []
+    for s_i, (depth, n_heads) in enumerate(zip(cfg.depths, cfg.heads)):
+        side = cfg.stage_side(s_i)
+        stages.append(StageSpec(
+            layers=depth, dim=cfg.stage_dim(s_i), heads=n_heads,
+            mlp_ratio=cfg.mlp_ratio, tokens=cfg.window * cfg.window,
+            n_windows=(side // cfg.window) ** 2,
+            patch_merging=(s_i < len(cfg.depths) - 1)))
+    return VisionModelSpec(name=cfg.name,
+                           image=(cfg.image, cfg.image, 3),
+                           patch=cfg.patch, stages=tuple(stages),
+                           embed_dim=cfg.embed_dim)
 
 
-def _region_ids(h: int, w: int, win: int, shift: int) -> np.ndarray:
-    """Region labels for shifted-window masking (standard Swin scheme)."""
-    ids = np.zeros((h, w), np.int32)
-    cnt = 0
-    for hs in (slice(0, -win), slice(-win, -shift), slice(-shift, None)):
-        for ws in (slice(0, -win), slice(-win, -shift), slice(-shift, None)):
-            ids[hs, ws] = cnt
-            cnt += 1
-    return ids
+@functools.lru_cache(maxsize=None)
+def schedule(cfg: SwinConfig) -> sched_lib.Schedule:
+    return sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
+                                      backend=cfg.backend,
+                                      hierarchical=True)
 
 
-def _wmsa(bp: Params, x: jax.Array, n_heads: int, win: int, shift: int,
-          grid_h: int, grid_w: int, rel_idx: jax.Array) -> jax.Array:
-    """Windowed MSA on (B, H, W, C) tokens."""
+def forward(params: Params, patches: jax.Array, cfg: SwinConfig,
+            observer=None) -> jax.Array:
+    """patches: (B, (image/patch)^2, P*P*3) -> (B, n_classes).
+
+    Replays the compiled schedule over the shared batched kernels; with
+    QTensor params + a calibrator observer this is the int8 PTQ path.
+    """
+    return sched_lib.run_schedule(schedule(cfg), params, patches,
+                                  observer=observer)
+
+
+def quantize_swin(params: Params) -> Params:
+    """int8 PTQ (per-(head, channel) wq/wk/wv, per-channel matmuls)."""
+    return quantize_vision_params(params)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference path (numerical oracle for the scheduled execution)
+# ---------------------------------------------------------------------------
+
+
+def _wmsa_ref(bp: Params, x: jax.Array, win: int, shift: int,
+              rel_idx: jax.Array) -> jax.Array:
+    """Windowed MSA on (B, H, W, C) tokens — direct einsum, no kernels."""
     b, h, w, c = x.shape
+    n_heads = bp["wq"].shape[0]
     dh = c // n_heads
     if shift:
         x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
-    xw = _window_partition(x, win)                      # (B*nW, n, C)
+    xw = sched_lib.window_partition(x, win)             # (B*nW, n, C)
     n = win * win
-    qkv = xw @ bp["w_qkv"] + bp["b_qkv"]
-    q, k, v = jnp.split(qkv, 3, axis=-1)
-
-    def heads(t):
-        return t.reshape(-1, n, n_heads, dh).transpose(0, 2, 1, 3)
-
-    q, k, v = heads(q), heads(k), heads(v)
+    q = jnp.einsum("wnc,hcd->whnd", xw, bp["wq"])
+    k = jnp.einsum("wnc,hcd->whnd", xw, bp["wk"])
+    v = jnp.einsum("wnc,hcd->whnd", xw, bp["wv"])
     s = jnp.einsum("whnd,whmd->whnm", q, k) * (dh ** -0.5)
     bias = bp["rel_bias"][rel_idx]                      # (n, n, H)
     s = s + bias.transpose(2, 0, 1)[None]
-    if shift:
-        ids = jnp.asarray(_region_ids(h, w, win, shift))
-        idw = _window_partition(ids[None, :, :, None].astype(jnp.float32),
-                                win)[..., 0].astype(jnp.int32)  # (nW, n)
-        mask = idw[:, :, None] == idw[:, None, :]       # (nW, n, n)
-        n_w = mask.shape[0]
-        mask = jnp.tile(mask, (s.shape[0] // n_w, 1, 1))
-        s = jnp.where(mask[:, None], s, -1e30)
+    mask = jnp.asarray(sched_lib.shifted_window_mask(h, w, win, shift))
+    n_w = mask.shape[0]
+    s = s + jnp.tile(mask, (s.shape[0] // n_w, 1, 1))[:, None]
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("whnm,whmd->whnd", p, v)
     o = o.transpose(0, 2, 1, 3).reshape(-1, n, c) @ bp["w_msa"]
-    o = _window_reverse(o, win, h, w)
+    o = sched_lib.window_reverse(o, win, h, w)
     if shift:
         o = jnp.roll(o, (shift, shift), axis=(1, 2))
     return o
 
 
-def forward(params: Params, patches: jax.Array, cfg: SwinConfig
-            ) -> jax.Array:
-    """patches: (B, (image/patch)^2, P*P*3) -> (B, n_classes)."""
+def reference_forward(params: Params, patches: jax.Array, cfg: SwinConfig
+                      ) -> jax.Array:
+    """Float-only oracle: same math as the schedule, written directly."""
     b = patches.shape[0]
     side = cfg.image // cfg.patch
     x = patches @ params["patch_embed"]
     x = layer_norm(x, params["pe_ln_w"], params["pe_ln_b"])
     x = x.reshape(b, side, side, cfg.embed_dim)
-    rel_idx = jnp.asarray(_rel_pos_index(cfg.window))
+    rel_idx = jnp.asarray(sched_lib.rel_pos_index(cfg.window))
 
     for s_i, stage in enumerate(params["stages"]):
-        n_heads = cfg.heads[s_i]
         for b_i, bp in enumerate(stage["blocks"]):
             h, w, c = x.shape[1:]
-            shift = 0 if b_i % 2 == 0 else cfg.window // 2
+            n_windows = (h // cfg.window) * (w // cfg.window)
+            shift = (cfg.window // 2 if b_i % 2 == 1 and n_windows > 1
+                     else 0)
             ln = layer_norm(x, bp["ln1_w"], bp["ln1_b"])
-            x = x + _wmsa(bp, ln, n_heads, cfg.window, shift, h, w, rel_idx)
+            x = x + _wmsa_ref(bp, ln, cfg.window, shift, rel_idx)
             ln = layer_norm(x, bp["ln2_w"], bp["ln2_b"])
-            y = ops.mlp(ln.reshape(b, h * w, c), bp["w_up"], bp["w_down"],
-                        bp["b_up"], bp["b_down"], activation="gelu",
-                        backend=cfg.backend)
+            hid = jax.nn.gelu(ln.reshape(b, h * w, c) @ bp["w_up"]
+                              + bp["b_up"])
+            y = hid @ bp["w_down"] + bp["b_down"]
             x = x + y.reshape(b, h, w, c)
         if "merge_w" in stage:
             h, w, c = x.shape[1:]

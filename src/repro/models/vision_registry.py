@@ -1,0 +1,121 @@
+"""Registry of vision models served through the one ViTA pipeline.
+
+Each entry names a model family ViTA's fixed PE configuration serves with
+control-logic changes only (Sec. IV): plain ViT, DeiT, and Swin.  An entry
+provides two config builders —
+
+  * ``reduced`` (default): an edge-scale geometry that runs in seconds on
+    CPU; this is what the serving CLI, the bench, and CI exercise;
+  * ``full``: the paper's geometry (ImageNet-scale; no weights ship with
+    the repo — useful for schedule/perfmodel inspection and TPU runs).
+
+Family-generic helpers (`forward_fn`, `init_params`, `quantize`,
+`make_schedule`) dispatch on the config type, so `VisionServer` and the
+benchmarks stay model-agnostic: every registered model is a schedule
+replayed by `core.schedule.run_schedule` over the shared batched kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core import schedule as sched_lib
+from repro.core.quant import quantize_vision_params
+from repro.models import swin, vit
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionModel:
+    name: str
+    family: str                       # "vit" | "swin"
+    description: str
+    reduced: Callable[[], Any]        # -> ViTConfig | SwinConfig
+    full: Callable[[], Any]
+
+
+def _vit_edge_reduced():
+    return vit.ViTConfig(name="vit_edge_32", image=32, patch=8, dim=96,
+                         heads=4, layers=4, n_classes=10)
+
+
+_REGISTRY: Dict[str, VisionModel] = {}
+
+
+def _register(m: VisionModel) -> None:
+    _REGISTRY[m.name] = m
+
+
+_register(VisionModel(
+    name="vit_edge", family="vit",
+    description="edge-scale plain ViT (the repo's demo/training model)",
+    reduced=_vit_edge_reduced,
+    full=lambda: vit.vit_b16(256),
+))
+
+_register(VisionModel(
+    name="deit_t", family="vit",
+    description="DeiT-Tiny geometry (dim 192, 3 heads); reduced depth 4",
+    reduced=lambda: vit.ViTConfig(name="deit_t_64", image=64, patch=16,
+                                  dim=192, heads=3, layers=4, n_classes=10),
+    full=lambda: vit.deit_t(),
+))
+
+_register(VisionModel(
+    name="swin_t", family="swin",
+    description="Swin-T through the windowed control program; reduced = "
+                "2-stage 56px variant with shifted 7x7 windows + merging",
+    reduced=lambda: swin.swin_edge(),
+    full=lambda: swin.swin_t(),
+))
+
+
+def list_models() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> VisionModel:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown vision model {name!r}; registered: "
+                       f"{', '.join(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def build_cfg(name: str, *, full: bool = False,
+              backend: Optional[str] = None) -> Any:
+    entry = get(name)
+    cfg = (entry.full if full else entry.reduced)()
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, backend=backend)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Family-generic dispatch (on config type)
+# ---------------------------------------------------------------------------
+
+
+def _family_mod(cfg: Any):
+    if isinstance(cfg, swin.SwinConfig):
+        return swin
+    if isinstance(cfg, vit.ViTConfig):
+        return vit
+    raise TypeError(f"not a registered vision config: {type(cfg)!r}")
+
+
+def forward_fn(cfg: Any) -> Callable:
+    """(params, patches, cfg, observer=None) -> logits for this family."""
+    return _family_mod(cfg).forward
+
+
+def init_params(key, cfg: Any) -> Any:
+    return _family_mod(cfg).init_params(key, cfg)
+
+
+def make_schedule(cfg: Any) -> sched_lib.Schedule:
+    return _family_mod(cfg).schedule(cfg)
+
+
+def quantize(params: Any) -> Any:
+    """int8 PTQ — one convention across families (core.quant)."""
+    return quantize_vision_params(params)

@@ -1,8 +1,12 @@
-"""Vision transformers (ViT / DeiT / Swin-T) — the paper's target models.
+"""Columnar vision transformers (ViT / DeiT) — the paper's target models.
 
-The execution structure mirrors ViTA's dataflow:
-  * MSA runs through `ops.vita_msa` — the paper-faithful fused per-head
-    kernel (one head's intermediates at a time, head-level pipeline);
+This module owns the *model description* (config, params, spec); execution
+belongs to the control program: `schedule(cfg)` compiles the config into a
+`core.schedule.Schedule` and `forward` replays it through the shared
+batched kernels —
+
+  * MSA runs through `ops.vita_msa_batched` — the paper-faithful fused
+    per-head `(batch, head)`-grid kernel (head-level pipeline);
   * MLP runs through `ops.mlp` — the inter-layer optimization (hidden layer
     never materialized);
   * the quantized path (`forward` with QTensor params + frozen activation
@@ -10,22 +14,23 @@ The execution structure mirrors ViTA's dataflow:
 
 The patch-embedding frontend operates on pre-extracted patch pixel vectors
 (B, N, P*P*3) — patchification is a reshape, done host-side by the data
-pipeline.  Swin-T adds windowed/shifted MSA, relative position bias and
-patch merging.
+pipeline.  Swin-T (windowed/shifted MSA, relative position bias, patch
+merging) lives in `models/swin.py` and runs through the SAME executor.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import (QTensor, amax_scale, quantize_per_channel,
-                              INT8_MAX)
-from repro.kernels import ops
-from .layers import Params, dense_init, layer_norm
+from repro.core import schedule as sched_lib
+from repro.core.perfmodel import StageSpec, VisionModelSpec
+from repro.core.quant import quantize_vision_params
+from .layers import Params, dense_init
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,106 +125,45 @@ def init_params(key, cfg: ViTConfig) -> Params:
 
 
 # ---------------------------------------------------------------------------
-# Float forward (ops-dispatched: vita_msa + fused mlp)
+# Spec + schedule emission (the control-program interface)
 # ---------------------------------------------------------------------------
 
 
-def _maybe_q_matmul(x, w, obs, name):
-    """matmul with optional int8 quantization (w: array or QTensor)."""
-    if isinstance(w, QTensor):
-        scale = obs.observe(name, x)
-        xq = jnp.clip(jnp.round(x / scale), -INT8_MAX, INT8_MAX
-                      ).astype(jnp.int8)
-        acc = jax.lax.dot_general(
-            xq, w.values, (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        return acc.astype(jnp.float32) * (scale * w.scale)
-    return x @ w
+def to_spec(cfg: ViTConfig) -> VisionModelSpec:
+    """Describe the config as the perfmodel's stage form — the same spec
+    the analytic ViTA model and the schedule compiler consume."""
+    stage = StageSpec(layers=cfg.layers, dim=cfg.dim, heads=cfg.heads,
+                      mlp_ratio=cfg.mlp_ratio, tokens=cfg.tokens)
+    return VisionModelSpec(name=cfg.name,
+                           image=(cfg.image, cfg.image, 3),
+                           patch=cfg.patch, stages=(stage,),
+                           embed_dim=cfg.dim)
+
+
+@functools.lru_cache(maxsize=None)
+def schedule(cfg: ViTConfig) -> sched_lib.Schedule:
+    """Compile the config into the phase schedule `forward` replays."""
+    return sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
+                                      backend=cfg.backend,
+                                      hierarchical=False)
 
 
 def forward(params: Params, patches: jax.Array, cfg: ViTConfig,
             observer=None) -> jax.Array:
     """patches: (B, N, P*P*3) -> class logits (B, n_classes).
 
-    With QTensor weights + an observer (core.quant.Calibrator) this runs the
-    int8 PTQ inference path; with float weights it runs through the ViTA
-    Pallas ops.
+    Thin wrapper: compile (cached) the config's schedule and replay it.
+    With QTensor weights + an observer (core.quant.Calibrator) this runs
+    the int8 PTQ inference path; with float weights it runs through the
+    batched ViTA Pallas ops.
     """
-    obs = observer
-    quantized = isinstance(params["patch_embed"], QTensor)
-    b, n, _ = patches.shape
-    x = _maybe_q_matmul(patches, params["patch_embed"], obs, "patch_embed")
-    x = x + (params["pos_embed"].dequantize()
-             if isinstance(params["pos_embed"], QTensor)
-             else params["pos_embed"])[None]
-
-    for i, lp in enumerate(params["layers"]):
-        h = layer_norm(x, lp["ln1_w"], lp["ln1_b"])
-        if quantized:
-            sa = _quant_msa(lp, h, cfg, obs, i)
-        else:
-            # One (batch, head)-grid kernel call over the whole batch — no
-            # per-image vmap; z stays stationary per image, head weights
-            # double-buffer across the batch loop.
-            sa = ops.vita_msa_batched(h, lp["wq"], lp["wk"], lp["wv"],
-                                      backend=cfg.backend)
-            sa = sa.transpose(0, 2, 1, 3).reshape(b, n, cfg.dim)
-        x = x + _maybe_q_matmul(sa, lp["w_msa"], obs, f"l{i}.w_msa")
-        h = layer_norm(x, lp["ln2_w"], lp["ln2_b"])
-        if quantized:
-            hid = jax.nn.gelu(_maybe_q_matmul(h, lp["w_up"], obs,
-                                              f"l{i}.w_up") + lp["b_up"])
-            y = _maybe_q_matmul(hid, lp["w_down"], obs,
-                                f"l{i}.w_down") + lp["b_down"]
-        else:
-            y = ops.mlp(h, lp["w_up"], lp["w_down"], lp["b_up"],
-                        lp["b_down"], activation="gelu",
-                        backend=cfg.backend)
-        x = x + y
-    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"])
-    pooled = jnp.mean(x, axis=1)
-    return _maybe_q_matmul(pooled, params["head"], obs, "head")
-
-
-def _head_scale(wq: QTensor) -> jax.Array:
-    """Per-(head, out-channel) scale (H, 1, Dh) -> the (H, Dh) kernel form."""
-    h, _, dh = wq.values.shape
-    return wq.scale.reshape(h, dh)
-
-
-def _quant_msa(lp, h, cfg: ViTConfig, obs, i: int) -> jax.Array:
-    """int8 per-head MSA through the fused Pallas path: Q/K/V projections
-    in int8 with the requant fused in-kernel, attention in fp32 (softmax
-    stays high precision, as in ViTA's dedicated softmax unit)."""
-    b, n, d = h.shape
-    scale = obs.observe(f"l{i}.qkv_in", h)
-    hq = jnp.clip(jnp.round(h / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
-    sa = ops.vita_msa_int8(
-        hq, lp["wq"].values, lp["wk"].values, lp["wv"].values,
-        scale, _head_scale(lp["wq"]), _head_scale(lp["wk"]),
-        _head_scale(lp["wv"]), backend=cfg.backend)
-    return sa.transpose(0, 2, 1, 3).reshape(b, n, d)
+    return sched_lib.run_schedule(schedule(cfg), params, patches,
+                                  observer=observer)
 
 
 def quantize_vit(params: Params) -> Params:
     """Per-channel int8 PTQ of all ViT weights (biases/norms stay float)."""
-    out: Params = {}
-    for k, v in params.items():
-        if k == "layers":
-            def _q(kk, vv):
-                if kk in ("wq", "wk", "wv"):
-                    # per-(head, out-channel): reduce over D only
-                    from repro.core.quant import quantize
-                    return quantize(vv, amax_scale(vv, axis=(1,)))
-                if kk in ("w_msa", "w_up", "w_down"):
-                    return quantize_per_channel(vv)
-                return vv
-            out[k] = [{kk: _q(kk, vv) for kk, vv in lp.items()} for lp in v]
-        elif k in ("patch_embed", "head"):
-            out[k] = quantize_per_channel(v)
-        else:
-            out[k] = v
-    return out
+    return quantize_vision_params(params)
 
 
 def extract_patches(images: jax.Array, patch: int) -> jax.Array:

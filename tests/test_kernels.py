@@ -257,6 +257,82 @@ def test_vita_msa_int8_approximates_float():
     np.testing.assert_allclose(out, expect, rtol=0.1, atol=0.02)
 
 
+# -- windowed (Swin W-MSA) mode: windows folded into the batch axis ---------
+
+
+def _window_problem(key, b, n_w, n, d, h, dh, shifted=True):
+    ks = jax.random.split(key, 6)
+    z = rand(ks[0], (b * n_w, n, d), scale=0.3)
+    ws = [rand(k, (h, d, dh), scale=0.05) for k in ks[1:4]]
+    bias = rand(ks[4], (h, n, n), scale=0.5)
+    if shifted:
+        keep = jax.random.bernoulli(ks[5], 0.75, (n_w, n, n))
+        keep = keep | jnp.eye(n, dtype=bool)[None]   # never mask the diagonal
+        mask = jnp.where(keep, 0.0, -1e30)
+    else:
+        mask = jnp.zeros((n_w, n, n))
+    return z, ws, bias, mask
+
+
+@pytest.mark.parametrize("b,n_w,h", [(1, 4, 3), (3, 4, 6), (2, 1, 3)])
+def test_vita_msa_windowed_matches_ref(b, n_w, h):
+    """W-MSA on the same (batch, head) grid: per-head rel-pos bias selected
+    by the head index, per-window region mask selected by i % nW."""
+    n, d, dh = 49, 48, 16
+    z, ws, bias, mask = _window_problem(jax.random.PRNGKey(21),
+                                        b, n_w, n, d, h, dh)
+    out = vita_msa_batched(z, *ws, bias, mask, interpret=True)
+    assert out.shape == (b * n_w, h, n, dh)
+    expect = ref.vita_msa_batched_ref(z, *ws, bias, mask)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_vita_msa_windowed_mask_isolates_regions():
+    """A masked-out (cross-region) key must not influence the output:
+    perturbing its value row is invisible wherever the mask forbids it."""
+    b, n_w, n, d, h, dh = 1, 2, 16, 24, 2, 12
+    z, ws, bias, _ = _window_problem(jax.random.PRNGKey(22),
+                                     b, n_w, n, d, h, dh, shifted=False)
+    # window 0: token 0 may only attend to tokens < 8; window 1: unmasked
+    mask = np.zeros((n_w, n, n), np.float32)
+    mask[0, 0, 8:] = -1e30
+    mask = jnp.asarray(mask)
+    base = np.asarray(vita_msa_batched(z, *ws, bias, mask, interpret=True))
+    z2 = z.at[0, 12].add(7.0)        # masked-out token in window 0
+    out = np.asarray(vita_msa_batched(z2, *ws, bias, mask, interpret=True))
+    # query 0 of window 0 can't see token 12 -> unchanged
+    np.testing.assert_allclose(out[0, :, 0], base[0, :, 0],
+                               rtol=1e-5, atol=1e-5)
+    # but unmasked queries in the same window do see it
+    assert not np.allclose(out[0, :, 1], base[0, :, 1])
+
+
+@pytest.mark.parametrize("b,n_w,h", [(2, 4, 3)])
+def test_vita_msa_int8_windowed_matches_ref(b, n_w, h):
+    """int8 W-MSA: requant in-kernel, bias+mask added in the fp32 softmax
+    stage (ViTA's high-precision softmax unit)."""
+    n, d, dh = 49, 48, 16
+    ks = jax.random.split(jax.random.PRNGKey(23), 8)
+    zq = jax.random.randint(ks[0], (b * n_w, n, d), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (h, d, dh), -127, 128, jnp.int8)
+    wk = jax.random.randint(ks[2], (h, d, dh), -127, 128, jnp.int8)
+    wv = jax.random.randint(ks[3], (h, d, dh), -127, 128, jnp.int8)
+    xs = jnp.asarray(0.013)
+    qs = jax.random.uniform(ks[4], (h, dh), minval=1e-3, maxval=0.03)
+    ss = jax.random.uniform(ks[5], (h, dh), minval=1e-3, maxval=0.03)
+    vs = jax.random.uniform(ks[6], (h, dh), minval=1e-3, maxval=0.03)
+    bias = rand(ks[7], (h, n, n), scale=0.5)
+    keep = jax.random.bernoulli(ks[7], 0.8, (n_w, n, n))
+    keep = keep | jnp.eye(n, dtype=bool)[None]
+    mask = jnp.where(keep, 0.0, -1e30)
+    out = vita_msa_int8(zq, wq, wk, wv, xs, qs, ss, vs, bias, mask,
+                        interpret=True)
+    assert out.shape == (b * n_w, h, n, dh) and out.dtype == jnp.float32
+    expect = ref.vita_msa_int8_ref(zq, wq, wk, wv, xs, qs, ss, vs,
+                                   bias, mask)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # RG-LRU chunked scan kernel
 # ---------------------------------------------------------------------------

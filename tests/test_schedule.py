@@ -1,0 +1,239 @@
+"""Control-program layer: schedule compilation, the shared executor, and
+Swin through the batched pipeline (windowed kernels, shifted masks, int8).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule as sched_lib
+from repro.core.quant import (Calibrator, QTensor, ptq_tolerance,
+                              quantize_vision_params)
+from repro.models import swin, vision_registry, vit
+
+
+@pytest.fixture(scope="module")
+def swin_setup():
+    cfg = swin.swin_edge()
+    params = swin.init_params(jax.random.PRNGKey(0), cfg)
+    imgs = np.random.default_rng(0).standard_normal(
+        (2, cfg.image, cfg.image, 3)).astype(np.float32)
+    patches = vit.extract_patches(jnp.asarray(imgs), cfg.patch)
+    return cfg, params, patches
+
+
+# ---------------------------------------------------------------------------
+# Schedule compilation
+# ---------------------------------------------------------------------------
+
+
+def test_vit_schedule_structure():
+    cfg = vit.ViTConfig(name="t", image=32, patch=8, dim=64, heads=4,
+                        layers=3, n_classes=10)
+    s = vit.schedule(cfg)
+    assert s.counts() == {"embed": 1, "msa": 3, "mlp": 3, "head": 1}
+    embed = s.phases[0]
+    assert embed.pos_embed and not embed.norm         # columnar frontend
+    for ph in s.phases:
+        assert ph.window == 0 and ph.shift == 0       # global MSA only
+    msa = [p for p in s.phases if p.kind == "msa"]
+    assert [p.path for p in msa] == [("layers", i) for i in range(3)]
+    assert all(p.grid == (4, 4) and p.heads == cfg.heads for p in msa)
+
+
+def test_swin_schedule_structure():
+    cfg = swin.swin_edge()                            # 14x14 -> merge -> 7x7
+    s = swin.schedule(cfg)
+    assert s.counts() == {"embed": 1, "msa": 4, "mlp": 4, "merge": 1,
+                          "head": 1}
+    embed = s.phases[0]
+    assert embed.norm and not embed.pos_embed         # hierarchical frontend
+    msa = [p for p in s.phases if p.kind == "msa"]
+    assert all(p.window == 7 for p in msa)
+    # stage 0 (4 windows): block 1 shifted; stage 1 (1 window): never
+    assert [p.shift for p in msa] == [0, 3, 0, 0]
+    assert [p.grid for p in msa] == [(14, 14), (14, 14), (7, 7), (7, 7)]
+    assert [p.heads for p in msa] == [3, 3, 6, 6]
+    assert msa[0].path == ("stages", 0, "blocks", 0)
+    merge = next(p for p in s.phases if p.kind == "merge")
+    assert merge.path == ("stages", 0) and merge.grid == (14, 14)
+
+
+def test_full_swin_t_schedule_compiles():
+    s = swin.schedule(swin.swin_t())
+    assert s.counts() == {"embed": 1, "msa": 12, "mlp": 12, "merge": 3,
+                          "head": 1}
+    shifts = [p.shift for p in s.phases if p.kind == "msa"]
+    # last stage is 7x7 = one window -> shift elided there only
+    assert shifts == [0, 3] * 5 + [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Shifted-window mask semantics
+# ---------------------------------------------------------------------------
+
+
+def test_shifted_window_mask_against_coordinate_oracle():
+    """mask[w, i, j] == 0 iff both tokens' ORIGINAL (pre-roll) coordinates
+    fall in the same contiguous region along both axes — computed here
+    independently from source coordinates rather than slice labelling."""
+    gh = gw = 14
+    win, shift = 7, 3
+    mask = sched_lib.shifted_window_mask(gh, gw, win, shift)
+
+    def region(c, size):
+        """Contiguity class of an ORIGINAL coordinate: the roll stitches
+        [0, shift) (wrapped) after [size-win+shift, size); tokens may only
+        attend within their own class."""
+        if c < shift:
+            return 2
+        return 0 if c < size - win + shift else 1
+
+    n_side = gh // win
+    for w_id in range(n_side * n_side):
+        wr, wc = divmod(w_id, n_side)
+        for i in range(win * win):
+            for j in range(win * win):
+                def orig(t):
+                    r, c = divmod(t, win)
+                    return ((wr * win + r + shift) % gh,
+                            (wc * win + c + shift) % gw)
+                (ri, ci), (rj, cj) = orig(i), orig(j)
+                same = (region(ri, gh) == region(rj, gh)
+                        and region(ci, gw) == region(cj, gw))
+                assert (mask[w_id, i, j] == 0.0) == same, (w_id, i, j)
+
+
+def test_shifted_window_mask_basic_properties():
+    m = np.asarray(sched_lib.shifted_window_mask(14, 14, 7, 3))
+    assert m.shape == (4, 49, 49)
+    np.testing.assert_array_equal(m, m.transpose(0, 2, 1))   # symmetric
+    assert (np.diagonal(m, axis1=1, axis2=2) == 0.0).all()   # self-attention
+    assert (m < 0).any()                                     # something cut
+    z = sched_lib.shifted_window_mask(14, 14, 7, 0)
+    assert (np.asarray(z) == 0.0).all()                      # no-shift: open
+
+
+def test_window_partition_roundtrip_and_order():
+    """Partition order must satisfy the kernel's window-id = index % nW
+    contract and invert exactly."""
+    b, gh, gw, c, win = 2, 4, 4, 3, 2
+    x = jnp.arange(b * gh * gw * c, dtype=jnp.float32
+                   ).reshape(b, gh, gw, c)
+    xw = sched_lib.window_partition(x, win)
+    n_w = (gh // win) * (gw // win)
+    assert xw.shape == (b * n_w, win * win, c)
+    back = sched_lib.window_reverse(xw, win, gh, gw)
+    np.testing.assert_array_equal(back, x)
+    # row i of the flat axis is window (i % nW) of image (i // nW)
+    np.testing.assert_array_equal(xw[n_w], xw.reshape(
+        b, n_w, win * win, c)[1, 0])
+
+
+# ---------------------------------------------------------------------------
+# Swin through the batched control program
+# ---------------------------------------------------------------------------
+
+
+def test_swin_schedule_matches_dense_reference(swin_setup):
+    cfg, params, patches = swin_setup
+    got = swin.forward(params, patches, cfg)
+    want = swin.reference_forward(params, patches, cfg)
+    assert got.shape == (patches.shape[0], cfg.n_classes)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_swin_pallas_and_xla_backends_agree(swin_setup):
+    cfg, params, patches = swin_setup
+    a = swin.forward(params, patches, cfg)
+    b = swin.forward(params, patches,
+                     dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+def test_swin_shift_changes_result(swin_setup):
+    """The shifted block must actually see cross-window context: zeroing
+    the shift in the schedule changes the logits."""
+    cfg, params, patches = swin_setup
+    base = swin.forward(params, patches, cfg)
+    s = swin.schedule(cfg)
+    phases = tuple(dataclasses.replace(p, shift=0) if p.kind == "msa"
+                   else p for p in s.phases)
+    noshift = sched_lib.run_schedule(
+        dataclasses.replace(s, phases=phases), params, patches)
+    assert not np.allclose(base, noshift, rtol=1e-3, atol=1e-3)
+
+
+def test_swin_int8_within_calibration_tolerance(swin_setup):
+    cfg, params, patches = swin_setup
+    qparams = quantize_vision_params(params)
+    cal = Calibrator()
+    swin.forward(qparams, patches, cfg, observer=cal)
+    cal.freeze()
+    qlogits = swin.forward(qparams, patches, cfg, observer=cal)
+    logits = swin.forward(params, patches, cfg)
+    scale = float(jnp.abs(logits).max())
+    err = float(jnp.abs(qlogits - logits).max())
+    assert err <= ptq_tolerance(scale), (err, scale)
+
+
+def test_quantize_vision_params_swin_layout(swin_setup):
+    cfg, params, _ = swin_setup
+    qp = quantize_vision_params(params)
+    b0 = qp["stages"][0]["blocks"][0]
+    h = cfg.heads[0]
+    dh = cfg.embed_dim // h
+    for k in ("wq", "wk", "wv"):
+        assert isinstance(b0[k], QTensor)
+        assert b0[k].scale.shape == (h, 1, dh)     # per-(head, out-channel)
+    assert isinstance(qp["stages"][0]["merge_w"], QTensor)
+    assert isinstance(qp["patch_embed"], QTensor)
+    # norms, biases and the rel-pos table stay float
+    assert not isinstance(b0["rel_bias"], QTensor)
+    assert not isinstance(b0["ln1_w"], QTensor)
+    assert not isinstance(b0["b_up"], QTensor)
+
+
+def test_vit_calibration_sites_cover_every_phase():
+    """Calibration-site names are schedule-derived and must line up between
+    the calibration pass and frozen-scale inference."""
+    cfg = vit.ViTConfig(name="t", image=16, patch=8, dim=32, heads=2,
+                        layers=2, n_classes=4)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_vision_params(params)
+    patches = vit.extract_patches(
+        jnp.zeros((1, cfg.image, cfg.image, 3)), cfg.patch)
+    cal = Calibrator()
+    vit.forward(qp, patches, cfg, observer=cal)
+    want = {"patch_embed", "head"}
+    for i in range(cfg.layers):
+        want |= {f"l{i}.qkv_in", f"l{i}.w_msa", f"l{i}.w_up", f"l{i}.w_down"}
+    assert set(cal.amax) == want
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_the_paper_families():
+    assert set(vision_registry.list_models()) == {"vit_edge", "deit_t",
+                                                  "swin_t"}
+    with pytest.raises(KeyError):
+        vision_registry.get("resnet50")
+
+
+@pytest.mark.parametrize("name", ["vit_edge", "deit_t", "swin_t"])
+def test_registry_builds_and_schedules(name):
+    cfg = vision_registry.build_cfg(name)
+    s = vision_registry.make_schedule(cfg)
+    assert s.phases[0].kind == "embed" and s.phases[-1].kind == "head"
+    full = vision_registry.build_cfg(name, full=True)
+    fs = vision_registry.make_schedule(full)
+    assert len(fs.phases) >= len(s.phases)
+    # backend override lands in both the config and the compiled schedule
+    bcfg = vision_registry.build_cfg(name, backend="pallas")
+    assert vision_registry.make_schedule(bcfg).backend == "pallas"
