@@ -1,8 +1,9 @@
 """Vision serving throughput bench — every registered model, one pipeline.
 
 Runs the `VisionServer` micro-batching driver over EACH model in
-`models.vision_registry` (ViT/DeiT/Swin through the same batched control
-program) for a sweep of batch buckets in both float and int8 (PTQ) modes,
+`models.vision_registry` (ViT/DeiT/Swin/TNT through the same batched
+control program) for a sweep of batch buckets in both float and int8 (PTQ)
+modes,
 printing the harness's ``name,us_per_call,derived`` CSV rows and emitting a
 ``BENCH_vision_serve.json`` record with per-model throughput, p50/p99
 latency, int8-vs-float prediction agreement and logit error — the
@@ -93,8 +94,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
 
-    models = (args.models.split(",") if args.models
-              else list(vision_registry.list_models()))
+    registered = vision_registry.list_models()
+    models = args.models.split(",") if args.models else list(registered)
+    unknown = sorted(set(models) - set(registered))
+    if unknown:
+        raise SystemExit(
+            f"[vision-serve-bench] unknown model(s): {', '.join(unknown)}; "
+            f"registered models are: {', '.join(registered)}")
     requests = 8 if args.smoke else 16
     batches = (1, 4) if args.smoke else (1, 8)
 
@@ -116,13 +122,18 @@ def main(argv=None) -> dict:
     # -- registry coverage + PTQ tolerance gates (CI fails on either) ------
     want = {(m, mode) for m in models for mode in ("float", "int8")}
     have = {(r["model"], r["mode"]) for r in runs}
-    missing = want - have
+    missing = sorted(want - have)
     if missing:
-        raise SystemExit(f"missing bench rows for: {sorted(missing)}")
+        detail = ", ".join(f"{m} [{mode}]" for m, mode in missing)
+        raise SystemExit(
+            f"[vision-serve-bench] registry coverage gate failed: no bench "
+            f"row for {detail} — every registered model must emit a float "
+            f"and an int8 row in {args.out}")
     bad = [p["model"] for p in parities if not p["within_tolerance"]]
     if bad:
-        raise SystemExit(f"int8 logits outside calibration tolerance "
-                         f"for: {bad}")
+        raise SystemExit(
+            f"[vision-serve-bench] PTQ tolerance gate failed: int8 logits "
+            f"outside calibration tolerance for: {', '.join(bad)}")
     return record
 
 

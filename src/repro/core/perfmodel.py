@@ -72,7 +72,15 @@ class VitaHW:
 
 @dataclasses.dataclass(frozen=True)
 class StageSpec:
-    """One stage of a (possibly hierarchical) vision transformer."""
+    """One stage of a (possibly hierarchical) vision transformer.
+
+    The ``inner_*`` fields describe a TNT-style inner (pixel-level)
+    transformer that runs before each outer block: ``inner_tokens`` pixel
+    tokens of ``inner_dim`` channels per outer token, attended by
+    ``inner_heads`` heads, folded back into the outer stream by a linear
+    projection.  ``inner_tokens == 0`` (the default) means no inner blocks
+    — plain ViT/DeiT/Swin stages are unaffected.
+    """
 
     layers: int
     dim: int                      # latent dim D for this stage
@@ -81,6 +89,10 @@ class StageSpec:
     tokens: int = 0               # sequence length N seen by MSA (per window)
     n_windows: int = 1            # windows per image (Swin); 1 = global MSA
     patch_merging: bool = False   # patch-merging layer after this stage
+    inner_tokens: int = 0         # TNT pixel tokens per outer token (0 = off)
+    inner_dim: int = 0            # TNT pixel-embedding channels c
+    inner_heads: int = 0          # TNT inner-MSA heads
+    inner_mlp_ratio: float = 4.0  # TNT inner-MLP expansion
 
     @property
     def head_dim(self) -> int:
@@ -89,6 +101,14 @@ class StageSpec:
     @property
     def mlp_hidden(self) -> int:
         return int(self.dim * self.mlp_ratio)
+
+    @property
+    def inner_head_dim(self) -> int:
+        return self.inner_dim // self.inner_heads if self.inner_heads else 0
+
+    @property
+    def inner_mlp_hidden(self) -> int:
+        return int(self.inner_dim * self.inner_mlp_ratio)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +150,20 @@ def deit_t(image: int = 224) -> VisionModelSpec:
     return _vit(f"DeiT-T@{image}", image, 192, 3, 12)
 
 
+def tnt_s(image: int = 224) -> VisionModelSpec:
+    """TNT-S (Han et al. 2021): 16x16 patches, each split into 16 4x4-pixel
+    sub-patches; inner transformer at c=24 / 4 heads, outer at D=384 / 6
+    heads, 12 layers.  The inner blocks are global MSA over 16 tokens,
+    batched over every patch — the same batch-fold trick the schedule uses
+    for Swin windows."""
+    tokens = (image // 16) ** 2
+    stage = StageSpec(layers=12, dim=384, heads=6, mlp_ratio=4.0,
+                      tokens=tokens, inner_tokens=16, inner_dim=24,
+                      inner_heads=4, inner_mlp_ratio=4.0)
+    return VisionModelSpec(name=f"TNT-S@{image}", image=(image, image, 3),
+                           patch=16, stages=(stage,), embed_dim=384)
+
+
 def swin_t(image: int = 224) -> VisionModelSpec:
     """Swin-T: patch 4, window 7, depths (2,2,6,2), dims 96..768."""
     depths = (2, 2, 6, 2)
@@ -157,6 +191,7 @@ PAPER_MODELS: Dict[str, VisionModelSpec] = {
     "deit_s_224": deit_s(224),
     "deit_t_224": deit_t(224),
     "swin_t_224": swin_t(224),
+    "tnt_s_224": tnt_s(224),
 }
 
 
@@ -202,6 +237,26 @@ def stage_mlp_macs(s: StageSpec) -> int:
     return 2 * n * s.dim * s.mlp_hidden
 
 
+def stage_inner_msa_macs(s: StageSpec) -> int:
+    """TNT inner-block MSA MACs for one layer: the inner MSA runs per outer
+    token (a batch of s.tokens "windows" of inner_tokens pixels), plus the
+    fold projection (inner_tokens*c -> D) that re-enters the outer stream —
+    counted here with the concat projection, its structural analogue."""
+    if not s.inner_tokens:
+        return 0
+    m, c = s.inner_tokens, s.inner_dim
+    per_token = 3 * m * c * c + 2 * m * m * c + m * c * c
+    fold = (m * c) * s.dim
+    return (per_token + fold) * s.tokens * s.n_windows
+
+
+def stage_inner_mlp_macs(s: StageSpec) -> int:
+    if not s.inner_tokens:
+        return 0
+    m = s.inner_tokens * s.tokens * s.n_windows
+    return 2 * m * s.inner_dim * s.inner_mlp_hidden
+
+
 def stage_patch_merging_macs(s: StageSpec) -> int:
     if not s.patch_merging:
         return 0
@@ -215,8 +270,8 @@ def count_macs(m: VisionModelSpec) -> MacBreakdown:
     h, w, c = m.image
     b.patch_embed = m.patch_tokens * (c * m.patch * m.patch) * m.embed_dim
     for s in m.stages:
-        b.msa += s.layers * stage_msa_macs(s)
-        b.mlp += s.layers * stage_mlp_macs(s)
+        b.msa += s.layers * (stage_msa_macs(s) + stage_inner_msa_macs(s))
+        b.mlp += s.layers * (stage_mlp_macs(s) + stage_inner_mlp_macs(s))
         b.patch_merging += stage_patch_merging_macs(s)
     return b
 
@@ -337,6 +392,28 @@ def aux_phase(hw: VitaHW, s: StageSpec) -> PhaseCycles:
     return PhaseCycles("aux", float(ln + res + rq), 0.0, 0.0)
 
 
+def inner_stage(s: StageSpec) -> StageSpec:
+    """The TNT inner transformer as a stage of its own: global MSA over
+    ``inner_tokens`` pixel tokens, batched over every outer token — the
+    n_windows slot carries the batch fold, exactly as the schedule runs it."""
+    assert s.inner_tokens, "stage has no inner transformer"
+    return StageSpec(layers=1, dim=s.inner_dim, heads=s.inner_heads,
+                     mlp_ratio=s.inner_mlp_ratio, tokens=s.inner_tokens,
+                     n_windows=s.tokens * s.n_windows)
+
+
+def fold_phase(hw: VitaHW, s: StageSpec) -> PhaseCycles:
+    """TNT fold projection: (tokens x m*c) @ (m*c x D) back into the outer
+    stream — structurally the concat projection of the inner transformer."""
+    n = s.tokens * s.n_windows
+    contract = s.inner_tokens * s.inner_dim
+    cyc = _gemm_cycles_rowcol(n, contract, s.dim, hw.k1, hw.k2,
+                              hw.n_blocks_e1)
+    cyc = cyc * (hw.e1_macs / hw.total_macs)
+    return PhaseCycles("fold", cyc, float(n * contract * s.dim),
+                       float(contract * s.dim))
+
+
 def patch_merging_phase(hw: VitaHW, s: StageSpec) -> PhaseCycles:
     t_out = s.tokens * s.n_windows // 4
     cyc = _gemm_cycles_rowcol(t_out, 4 * s.dim, 2 * s.dim,
@@ -362,7 +439,14 @@ def analyze(m: VisionModelSpec, hw: Optional[VitaHW] = None) -> PerfReport:
     hw = hw or VitaHW()
     phases: List[PhaseCycles] = [patch_embed_phase(hw, m)]
     for s in m.stages:
-        layer_phases = msa_phase(hw, s) + [mlp_phase(hw, s), aux_phase(hw, s)]
+        layer_phases: List[PhaseCycles] = []
+        if s.inner_tokens:                 # TNT: inner blocks + fold first
+            inn = inner_stage(s)
+            layer_phases += msa_phase(hw, inn) + [mlp_phase(hw, inn),
+                                                  aux_phase(hw, inn),
+                                                  fold_phase(hw, s)]
+        layer_phases += msa_phase(hw, s) + [mlp_phase(hw, s),
+                                            aux_phase(hw, s)]
         for _ in range(s.layers):
             phases.extend(dataclasses.replace(p) for p in layer_phases)
         if s.patch_merging:

@@ -144,22 +144,27 @@ def quantize_params(params: Any,
     return jax.tree_util.tree_map_with_path(_q, params)
 
 
-# Vision-model PTQ conventions (shared by ViT/DeiT and Swin param trees):
-# per-head projection stacks (H, D, Dh) are quantized per-(head, out-channel)
-# — the scale granularity the fused int8 MSA kernel requantizes at — and
-# plain matmul weights per-output-channel.  Norms, biases, relative-position
-# bias tables and the learned positional embedding stay float.
+# Vision-model PTQ conventions (shared by the ViT/DeiT, Swin and TNT param
+# trees): per-head projection stacks (H, D, Dh) are quantized
+# per-(head, out-channel) — the scale granularity the fused int8 MSA kernel
+# requantizes at — and plain matmul weights per-output-channel.  Because TNT
+# nests its inner and outer blocks as subtrees with the SAME key names, the
+# recursion covers both streams' QKV stacks with no TNT-specific code.
+# Norms, biases, relative-position bias tables and the learned positional
+# embeddings (outer and inner) stay float.
 _PER_HEAD_KEYS = frozenset({"wq", "wk", "wv"})
 _PER_CHANNEL_KEYS = frozenset({"patch_embed", "head", "w_msa",
-                               "w_up", "w_down", "merge_w"})
+                               "w_up", "w_down", "merge_w",
+                               "pixel_embed", "fold_w"})
 
 
 def quantize_vision_params(params: Any) -> Any:
-    """int8 PTQ of a vision-transformer param tree (ViT/DeiT or Swin).
+    """int8 PTQ of a vision-transformer param tree (ViT/DeiT, Swin or TNT).
 
     Works on the schedule-normalized layout: nested dicts/lists with
     per-head ``wq/wk/wv`` stacks, ``w_msa``/``w_up``/``w_down`` block
-    matmuls, and (Swin) ``merge_w`` patch-merging projections.
+    matmuls, (Swin) ``merge_w`` patch-merging projections, and (TNT)
+    ``pixel_embed`` / ``fold_w`` inner-stream projections.
     """
 
     def _q(node):

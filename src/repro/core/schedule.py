@@ -10,7 +10,10 @@ that replays any schedule over the shared batched kernels.
 Phases (mirroring the accelerator's phase sequencing):
 
   * ``embed``  — patch-pixel projection (+ LayerNorm for hierarchical
-                 models, + learned positional embedding for columnar ones)
+                 models, + learned positional embedding for columnar ones).
+                 For TNT it is the dual-stream frontend: pixel sub-patches
+                 embed into the inner stream, whose flattened projection
+                 seeds the outer stream
   * ``msa``    — LN -> per-head MSA -> concat projection -> residual.
                  Global MSA runs the `(batch, head)`-grid `vita_msa`
                  kernel; windowed/shifted W-MSA runs the SAME grid with
@@ -18,12 +21,19 @@ Phases (mirroring the accelerator's phase sequencing):
                  bias and the shifted-window region mask
   * ``mlp``    — LN -> inter-layer fused MLP -> residual
   * ``merge``  — Swin patch merging (2x2 concat -> LN -> linear)
+  * ``inner_msa`` / ``inner_mlp`` — TNT pixel-level blocks: the SAME msa /
+                 mlp math on the inner stream, whose batch axis carries
+                 images x patches (every patch's pixel tokens are one row
+                 of the `(batch, head)` grid — the Swin window fold, reused)
+  * ``fold``   — TNT re-entry: LN over the flattened pixel tokens of each
+                 patch -> linear to the outer dim -> residual into the
+                 outer stream
   * ``head``   — final LN -> mean pool -> classifier
 
-Models (`models/vit.py`, `models/swin.py`) no longer own forward loops:
-they emit a spec, `compile_schedule` turns it into phases, and
-`run_schedule` executes — float through the Pallas/XLA ops, or int8 PTQ
-when the params are `QTensor`s and a calibrator observer is attached.
+Models (`models/vit.py`, `models/swin.py`, `models/tnt.py`) no longer own
+forward loops: they emit a spec, `compile_schedule` turns it into phases,
+and `run_schedule` executes — float through the Pallas/XLA ops, or int8
+PTQ when the params are `QTensor`s and a calibrator observer is attached.
 """
 
 from __future__ import annotations
@@ -55,14 +65,18 @@ class Phase:
     phase reads; ``site`` prefixes its activation-calibration entries."""
 
     kind: str                      # embed | msa | mlp | merge | head
+                                   # | inner_msa | inner_mlp | fold (TNT)
     path: Tuple[Any, ...]
     site: str
     grid: Tuple[int, int]          # (h, w) token grid at phase input
+                                   # (inner phases: the pixel sub-grid)
     heads: int = 0                 # descriptive (execution reads wq shape)
     window: int = 0                # 0 -> global MSA
     shift: int = 0                 # shifted-window offset (W-MSA odd blocks)
     pos_embed: bool = False        # embed: add learned positional embedding
     norm: bool = False             # embed: LayerNorm after projection
+    inner_tokens: int = 0          # embed: pixel tokens per patch (TNT; 0
+                                   # -> single-stream frontend)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,9 +112,13 @@ def compile_schedule(spec: VisionModelSpec, *, n_classes: int,
     img_h, img_w, _ = spec.image
     assert img_h == img_w, "control program assumes square images"
     side = img_h // spec.patch
+    inner_embed = spec.stages[0].inner_tokens if spec.stages else 0
+    assert not (inner_embed and hierarchical), \
+        "TNT inner blocks assume the columnar (single-stage) layout"
     phases = [Phase(kind="embed", path=(), site="patch_embed",
                     grid=(side, side), pos_embed=not hierarchical,
-                    norm=hierarchical)]
+                    norm=hierarchical or bool(inner_embed),
+                    inner_tokens=inner_embed)]
     flat_layer = 0
     for s_i, st in enumerate(spec.stages):
         exp_side = int(math.isqrt(st.tokens * st.n_windows))
@@ -110,6 +128,15 @@ def compile_schedule(spec: VisionModelSpec, *, n_classes: int,
         if window:
             assert side % window == 0, \
                 f"stage {s_i}: side {side} not divisible by window {window}"
+        if st.inner_tokens:
+            # the embed phase seeds the inner stream once, so inner blocks
+            # can only live in the first (columnar) stage
+            assert s_i == 0 and not hierarchical, \
+                f"stage {s_i}: inner blocks require the columnar " \
+                f"single-stage layout (TNT)"
+            mi = int(math.isqrt(st.inner_tokens))
+            assert mi * mi == st.inner_tokens, \
+                f"stage {s_i}: inner tokens {st.inner_tokens} not square"
         for b_i in range(st.layers):
             if hierarchical:
                 path = ("stages", s_i, "blocks", b_i)
@@ -118,14 +145,29 @@ def compile_schedule(spec: VisionModelSpec, *, n_classes: int,
                 path = ("layers", flat_layer)
                 site = f"l{flat_layer}"
                 flat_layer += 1
+            if st.inner_tokens:
+                # TNT: pixel-level blocks run first on the inner stream
+                # (batch axis = images x patches — the Swin window fold),
+                # then fold back into the outer token at this layer.
+                phases.append(Phase(kind="inner_msa",
+                                    path=path + ("inner",),
+                                    site=f"{site}.inner", grid=(mi, mi),
+                                    heads=st.inner_heads))
+                phases.append(Phase(kind="inner_mlp",
+                                    path=path + ("inner",),
+                                    site=f"{site}.inner", grid=(mi, mi)))
+                phases.append(Phase(kind="fold", path=path,
+                                    site=f"{site}.fold",
+                                    grid=(side, side)))
+            block = path + ("outer",) if st.inner_tokens else path
             # Swin alternates plain and shifted windows; with a single
             # window the shift is a no-op and is elided (standard Swin).
             shift = (window // 2 if window and b_i % 2 == 1
                      and st.n_windows > 1 else 0)
-            phases.append(Phase(kind="msa", path=path, site=site,
+            phases.append(Phase(kind="msa", path=block, site=site,
                                 grid=(side, side), heads=st.heads,
                                 window=window, shift=shift))
-            phases.append(Phase(kind="mlp", path=path, site=site,
+            phases.append(Phase(kind="mlp", path=block, site=site,
                                 grid=(side, side)))
         if st.patch_merging:
             phases.append(Phase(kind="merge", path=("stages", s_i),
@@ -155,6 +197,27 @@ def window_reverse(xw: jax.Array, win: int, h: int, w: int) -> jax.Array:
     b = xw.shape[0] // ((h // win) * (w // win))
     x = xw.reshape(b, h // win, w // win, win, win, -1)
     return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, h, w, -1)
+
+
+def pixel_partition(patches: jax.Array, m: int) -> jax.Array:
+    """(B, N, P*P*3) patch pixel vectors -> (B*N, m, P*P*3/m) sub-patches.
+
+    The TNT analogue of `window_partition`: each patch's P x P pixel block
+    is split into an ms x ms sub-grid (ms = sqrt(m)) of (P/ms)-pixel-square
+    sub-patches, and the patches fold into the batch axis — inner row r
+    holds patch (r % N) of image (r // N); inner token t is the sub-patch
+    at (t // ms, t % ms) of that patch.  Matches the (row, col, channel)
+    flattening of `vit.extract_patches`.
+    """
+    b, n, pd = patches.shape
+    ms = int(math.isqrt(m))
+    assert ms * ms == m, f"inner token count {m} must be a square"
+    p = int(math.isqrt(pd // 3))
+    assert p * p * 3 == pd, f"patch dim {pd} is not P*P*3"
+    assert p % ms == 0, f"patch side {p} not divisible by sub-grid {ms}"
+    ip = p // ms
+    x = patches.reshape(b * n, ms, ip, ms, ip, 3)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b * n, m, ip * ip * 3)
 
 
 @functools.lru_cache(maxsize=None)
@@ -286,6 +349,16 @@ def _mlp_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
     return x + y
 
 
+def _fold_phase(ph: Phase, bp: Any, x: jax.Array, inner: jax.Array,
+                obs) -> jax.Array:
+    """TNT re-entry: LN over each patch's flattened pixel tokens -> linear
+    projection to the outer dim -> residual into the outer stream."""
+    b, t, _ = x.shape
+    flat = inner.reshape(b, t, -1)                  # (B, N, m*c)
+    flat = ops.layer_norm(flat, bp["fold_ln_w"], bp["fold_ln_b"])
+    return x + _matmul(flat, bp["fold_w"], obs, ph.site) + bp["fold_b"]
+
+
 def _merge_phase(ph: Phase, sp: Any, x: jax.Array, obs) -> jax.Array:
     """Swin patch merging: 2x2 neighbourhood concat -> LN -> linear."""
     b, t, c = x.shape
@@ -309,21 +382,47 @@ def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
     obs = observer
     quantized = isinstance(params["patch_embed"], QTensor)
     x = patches
+    inner: Optional[jax.Array] = None      # TNT pixel stream (B*N, m, c)
+
+    def _float(v):
+        return v.dequantize() if isinstance(v, QTensor) else v
+
     for ph in sched.phases:
         if ph.kind == "embed":
-            x = _matmul(x, params["patch_embed"], obs, ph.site)
-            if ph.norm:
-                x = ops.layer_norm(x, params["pe_ln_w"], params["pe_ln_b"])
+            if ph.inner_tokens:
+                # TNT dual-stream frontend: sub-patches embed into the
+                # inner stream; its flattened projection seeds the outer.
+                b, t, _ = x.shape
+                sub = pixel_partition(x, ph.inner_tokens)
+                y = _matmul(sub, params["pixel_embed"], obs, "pixel_embed")
+                inner = y + _float(params["inner_pos_embed"])[None]
+                flat = ops.layer_norm(inner.reshape(b, t, -1),
+                                      params["pe_ln_w"], params["pe_ln_b"])
+                x = _matmul(flat, params["patch_embed"], obs, ph.site)
+            else:
+                x = _matmul(x, params["patch_embed"], obs, ph.site)
+                if ph.norm:
+                    x = ops.layer_norm(x, params["pe_ln_w"],
+                                       params["pe_ln_b"])
             if ph.pos_embed:
-                pos = params["pos_embed"]
-                x = x + (pos.dequantize()
-                         if isinstance(pos, QTensor) else pos)[None]
+                x = x + _float(params["pos_embed"])[None]
         elif ph.kind == "msa":
             x = _msa_phase(ph, _subtree(params, ph.path), x, obs,
                            quantized, sched.backend)
         elif ph.kind == "mlp":
             x = _mlp_phase(ph, _subtree(params, ph.path), x, obs,
                            quantized, sched.backend)
+        elif ph.kind == "inner_msa":
+            # The pixel stream's batch axis already carries images x
+            # patches, so the SAME phase executors (and the same
+            # `(batch, head)` grid kernels) run the inner blocks.
+            inner = _msa_phase(ph, _subtree(params, ph.path), inner, obs,
+                               quantized, sched.backend)
+        elif ph.kind == "inner_mlp":
+            inner = _mlp_phase(ph, _subtree(params, ph.path), inner, obs,
+                               quantized, sched.backend)
+        elif ph.kind == "fold":
+            x = _fold_phase(ph, _subtree(params, ph.path), x, inner, obs)
         elif ph.kind == "merge":
             x = _merge_phase(ph, _subtree(params, ph.path), x, obs)
         elif ph.kind == "head":

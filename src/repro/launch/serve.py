@@ -6,9 +6,9 @@ steps (one fused decode_step over the whole batch — the TPU-efficient
 regime); finished slots are refilled from the request queue with a prefill.
 
 Vision serving (any model registered in `models.vision_registry` —
-ViT/DeiT/Swin, float or ViTA's int8 PTQ mode, all through the one batched
-control-program pipeline) lives in `vision_serve.py` — pass ``--vision``
-to route there:
+ViT/DeiT/Swin/TNT, float or ViTA's int8 PTQ mode, all through the one
+batched control-program pipeline) lives in `vision_serve.py` — pass
+``--vision`` to route there:
 
 Usage (CPU examples):
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --reduced \

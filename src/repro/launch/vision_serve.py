@@ -8,9 +8,11 @@ drains them in micro-batches, pads each micro-batch up to the nearest
 runs the whole bucket through ONE batched forward.
 
 The forward is model-agnostic: any config in `models.vision_registry`
-(ViT, DeiT, Swin) compiles to a `core.schedule` control program replayed
-over the shared batched kernels — plain MSA on the `(batch, head)` Pallas
-grid, W-MSA on the same grid with windows folded into the batch axis.
+(ViT, DeiT, Swin, TNT) compiles to a `core.schedule` control program
+replayed over the shared batched kernels — plain MSA on the
+`(batch, head)` Pallas grid, W-MSA on the same grid with windows folded
+into the batch axis, TNT inner blocks on the same grid with patches folded
+into the batch axis.
 
 Modes:
   * ``float`` — the fp32/bf16 path through the batched Pallas ops;
@@ -61,8 +63,8 @@ class VisionServer:
     """Queue + pad-to-bucket micro-batching over any registered model.
 
     ``cfg`` may be any config the vision registry understands (ViT/DeiT's
-    `ViTConfig` or Swin's `SwinConfig`); the matching schedule-driven
-    forward is resolved per family.  ``buckets`` are the allowed batch
+    `ViTConfig`, Swin's `SwinConfig` or TNT's `TNTConfig`); the matching
+    schedule-driven forward is resolved per family.  ``buckets`` are the allowed batch
     sizes (ascending).  A drain step takes up to ``buckets[-1]`` queued
     requests, rounds up to the smallest bucket that fits, pads with zero
     images, and runs one batched forward — one compiled program per
@@ -252,7 +254,7 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
 def main(argv=None):
     ap = argparse.ArgumentParser(
         prog="vision_serve",
-        description="Serve a registered vision model (ViT/DeiT/Swin) "
+        description="Serve a registered vision model (ViT/DeiT/Swin/TNT) "
                     "through the batched ViTA pipeline.")
     ap.add_argument("--model", default="vit_edge",
                     choices=vision_registry.list_models(),

@@ -1,0 +1,276 @@
+"""TNT-S (Han et al. 2021) — Transformer-in-Transformer.
+
+TNT is the last model in ViTA's workload table (Sec. V) and the strongest
+test of the paper's Sec. IV claim: every TNT layer runs an *inner*
+transformer over the pixel sub-patches of each patch before the *outer*
+(patch-level) block, yet the fixed datapath never changes — only the
+control logic does.  This module reproduces that argument the same way
+`models/swin.py` did for windows: the inner blocks are ordinary MSA/MLP
+phases whose batch axis carries images x patches, so the SAME
+`(batch, head)`-grid kernels serve them with zero kernel changes (not even
+dispatch-table ones — see docs/MODELS.md for the verified claim).
+
+Per layer, the compiled schedule is
+
+  inner_msa -> inner_mlp -> fold -> msa -> mlp
+
+with the ``fold`` phase projecting each patch's flattened pixel tokens
+(LN -> linear, m*c -> D) back into the outer stream as a residual — the
+paper-faithful re-entry point of TNT's two streams.
+
+Weights use the per-head ``wq/wk/wv (H, D, Dh)`` layout of `models/vit.py`
+for BOTH the inner and outer blocks (nested as ``inner`` / ``outer``
+subtrees of each layer), so `core.quant.quantize_vision_params` covers TNT
+per-(head, out-channel) with no new machinery, and the int8 PTQ serving
+mode holds by construction.  Like ViT/Swin in this repo the blocks are
+QKV-bias-free and classification is by mean pooling (no class token) —
+matching ViTA's datapath, not the reference checkpoint format (see
+ROADMAP "Real weights + accuracy").
+
+`reference_forward` keeps a direct dense einsum implementation (no shared
+kernels, no schedule) as the numerical oracle for the scheduled path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schedule as sched_lib
+from repro.core.perfmodel import StageSpec, VisionModelSpec
+from repro.core.quant import quantize_vision_params
+from .layers import Params, dense_init, layer_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class TNTConfig:
+    name: str = "tnt_s_224"
+    image: int = 224
+    patch: int = 16               # outer patch side (pixels)
+    inner_patch: int = 4          # pixel sub-patch side within a patch
+    dim: int = 384                # outer (patch) embedding dim D
+    inner_dim: int = 24           # inner (pixel) embedding dim c
+    heads: int = 6                # outer MSA heads
+    inner_heads: int = 4          # inner MSA heads
+    layers: int = 12
+    mlp_ratio: float = 4.0
+    inner_mlp_ratio: float = 4.0
+    n_classes: int = 1000
+    backend: Optional[str] = None
+    dtype: str = "float32"
+
+    @property
+    def tokens(self) -> int:
+        """Outer (patch) tokens N."""
+        return (self.image // self.patch) ** 2
+
+    @property
+    def inner_tokens(self) -> int:
+        """Pixel tokens m per patch (the inner sequence length)."""
+        return (self.patch // self.inner_patch) ** 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def inner_head_dim(self) -> int:
+        return self.inner_dim // self.inner_heads
+
+    @property
+    def mlp_hidden(self) -> int:
+        return int(self.dim * self.mlp_ratio)
+
+    @property
+    def inner_mlp_hidden(self) -> int:
+        return int(self.inner_dim * self.inner_mlp_ratio)
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+    @property
+    def inner_patch_dim(self) -> int:
+        return self.inner_patch * self.inner_patch * 3
+
+    @property
+    def fold_dim(self) -> int:
+        """Flattened inner stream per patch: m * c (the fold contraction)."""
+        return self.inner_tokens * self.inner_dim
+
+
+def tnt_s(image: int = 224, **kw) -> TNTConfig:
+    """The paper's TNT-S: 16px patches of 16 4x4-pixel sub-patches,
+    inner c=24 / 4 heads, outer D=384 / 6 heads, 12 layers."""
+    return TNTConfig(name=f"tnt_s_{image}", image=image, **kw)
+
+
+def tnt_edge(image: int = 32, **kw) -> TNTConfig:
+    """CPU-friendly TNT with real dual-stream geometry: a 4x4 patch grid,
+    each 8px patch split into 4 sub-patches — every phase kind exercised
+    (inner_msa / inner_mlp / fold / msa / mlp) in seconds on CPU."""
+    kw.setdefault("n_classes", 10)
+    return TNTConfig(name=f"tnt_edge_{image}", image=image, patch=8,
+                     inner_patch=4, dim=96, inner_dim=16, heads=4,
+                     inner_heads=2, layers=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Init (per-head wq/wk/wv layout for BOTH streams — the vita_msa form)
+# ---------------------------------------------------------------------------
+
+
+def _block(ks, dim: int, n_heads: int, hidden: int, dtype) -> Params:
+    """One transformer block in the schedule-normalized ViT layout."""
+    dh = dim // n_heads
+
+    def per_head(k):
+        return jnp.stack([dense_init(kk, dim, dh, dtype)
+                          for kk in jax.random.split(k, n_heads)])
+
+    return {
+        "ln1_w": jnp.ones((dim,), dtype),
+        "ln1_b": jnp.zeros((dim,), dtype),
+        "wq": per_head(next(ks)),
+        "wk": per_head(next(ks)),
+        "wv": per_head(next(ks)),
+        "w_msa": dense_init(next(ks), dim, dim, dtype),
+        "ln2_w": jnp.ones((dim,), dtype),
+        "ln2_b": jnp.zeros((dim,), dtype),
+        "w_up": dense_init(next(ks), dim, hidden, dtype),
+        "b_up": jnp.zeros((hidden,), dtype),
+        "w_down": dense_init(next(ks), hidden, dim, dtype),
+        "b_down": jnp.zeros((dim,), dtype),
+    }
+
+
+def init_params(key, cfg: TNTConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = iter(jax.random.split(key, 32 * cfg.layers + 16))
+    params: Params = {
+        # inner frontend: sub-patch pixels -> pixel embeddings + pixel pos
+        "pixel_embed": dense_init(next(ks), cfg.inner_patch_dim,
+                                  cfg.inner_dim, dtype),
+        "inner_pos_embed": (jax.random.normal(
+            next(ks), (cfg.inner_tokens, cfg.inner_dim)) * 0.02
+            ).astype(dtype),
+        # outer frontend: LN(flattened pixel tokens) -> patch embeddings
+        "pe_ln_w": jnp.ones((cfg.fold_dim,), dtype),
+        "pe_ln_b": jnp.zeros((cfg.fold_dim,), dtype),
+        "patch_embed": dense_init(next(ks), cfg.fold_dim, cfg.dim, dtype),
+        "pos_embed": (jax.random.normal(
+            next(ks), (cfg.tokens, cfg.dim)) * 0.02).astype(dtype),
+    }
+    layers = []
+    for _ in range(cfg.layers):
+        layers.append({
+            "inner": _block(ks, cfg.inner_dim, cfg.inner_heads,
+                            cfg.inner_mlp_hidden, dtype),
+            "fold_ln_w": jnp.ones((cfg.fold_dim,), dtype),
+            "fold_ln_b": jnp.zeros((cfg.fold_dim,), dtype),
+            "fold_w": dense_init(next(ks), cfg.fold_dim, cfg.dim, dtype),
+            "fold_b": jnp.zeros((cfg.dim,), dtype),
+            "outer": _block(ks, cfg.dim, cfg.heads, cfg.mlp_hidden, dtype),
+        })
+    params["layers"] = layers
+    params["ln_f_w"] = jnp.ones((cfg.dim,), dtype)
+    params["ln_f_b"] = jnp.zeros((cfg.dim,), dtype)
+    params["head"] = dense_init(next(ks), cfg.dim, cfg.n_classes, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Spec + schedule emission (the control-program interface)
+# ---------------------------------------------------------------------------
+
+
+def to_spec(cfg: TNTConfig) -> VisionModelSpec:
+    """Describe the config in the perfmodel's stage form; the inner_*
+    fields carry the pixel-level transformer the schedule compiler turns
+    into inner_msa / inner_mlp / fold phases."""
+    stage = StageSpec(layers=cfg.layers, dim=cfg.dim, heads=cfg.heads,
+                      mlp_ratio=cfg.mlp_ratio, tokens=cfg.tokens,
+                      inner_tokens=cfg.inner_tokens,
+                      inner_dim=cfg.inner_dim,
+                      inner_heads=cfg.inner_heads,
+                      inner_mlp_ratio=cfg.inner_mlp_ratio)
+    return VisionModelSpec(name=cfg.name,
+                           image=(cfg.image, cfg.image, 3),
+                           patch=cfg.patch, stages=(stage,),
+                           embed_dim=cfg.dim)
+
+
+@functools.lru_cache(maxsize=None)
+def schedule(cfg: TNTConfig) -> sched_lib.Schedule:
+    return sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
+                                      backend=cfg.backend,
+                                      hierarchical=False)
+
+
+def forward(params: Params, patches: jax.Array, cfg: TNTConfig,
+            observer=None) -> jax.Array:
+    """patches: (B, (image/patch)^2, P*P*3) -> (B, n_classes).
+
+    Replays the compiled schedule over the shared batched kernels; with
+    QTensor params + a calibrator observer this is the int8 PTQ path.
+    """
+    return sched_lib.run_schedule(schedule(cfg), params, patches,
+                                  observer=observer)
+
+
+def quantize_tnt(params: Params) -> Params:
+    """int8 PTQ — per-(head, channel) QKV for inner AND outer blocks,
+    per-channel fold/embed/MLP matmuls (one convention, core.quant)."""
+    return quantize_vision_params(params)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference path (numerical oracle for the scheduled execution)
+# ---------------------------------------------------------------------------
+
+
+def _msa_ref(bp: Params, x: jax.Array) -> jax.Array:
+    """Global per-head MSA on (B', N, C) — direct einsum, no kernels."""
+    n_heads = bp["wq"].shape[0]
+    dh = x.shape[-1] // n_heads
+    q = jnp.einsum("bnc,hcd->bhnd", x, bp["wq"])
+    k = jnp.einsum("bnc,hcd->bhnd", x, bp["wk"])
+    v = jnp.einsum("bnc,hcd->bhnd", x, bp["wv"])
+    s = jnp.einsum("bhnd,bhmd->bhnm", q, k) * (dh ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhnm,bhmd->bhnd", p, v)
+    b, n = x.shape[:2]
+    return o.transpose(0, 2, 1, 3).reshape(b, n, -1) @ bp["w_msa"]
+
+
+def _block_ref(bp: Params, x: jax.Array) -> jax.Array:
+    """Pre-LN transformer block (MSA + MLP residuals), dense."""
+    x = x + _msa_ref(bp, layer_norm(x, bp["ln1_w"], bp["ln1_b"]))
+    h = layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+    return x + jax.nn.gelu(h @ bp["w_up"] + bp["b_up"]) @ bp["w_down"] \
+        + bp["b_down"]
+
+
+def reference_forward(params: Params, patches: jax.Array, cfg: TNTConfig
+                      ) -> jax.Array:
+    """Float-only oracle: same math as the schedule, written directly."""
+    b, n, _ = patches.shape
+    sub = sched_lib.pixel_partition(patches, cfg.inner_tokens)
+    y = sub @ params["pixel_embed"] + params["inner_pos_embed"][None]
+    flat = layer_norm(y.reshape(b, n, -1),
+                      params["pe_ln_w"], params["pe_ln_b"])
+    x = flat @ params["patch_embed"] + params["pos_embed"][None]
+
+    for lp in params["layers"]:
+        y = _block_ref(lp["inner"], y)
+        flat = layer_norm(y.reshape(b, n, -1),
+                          lp["fold_ln_w"], lp["fold_ln_b"])
+        x = x + flat @ lp["fold_w"] + lp["fold_b"]
+        x = _block_ref(lp["outer"], x)
+
+    x = layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+    return jnp.mean(x, axis=1) @ params["head"]

@@ -1,8 +1,8 @@
 """Registry of vision models served through the one ViTA pipeline.
 
 Each entry names a model family ViTA's fixed PE configuration serves with
-control-logic changes only (Sec. IV): plain ViT, DeiT, and Swin.  An entry
-provides two config builders —
+control-logic changes only (Sec. IV): plain ViT, DeiT, Swin, and TNT —
+the paper's full workload table.  An entry provides two config builders —
 
   * ``reduced`` (default): an edge-scale geometry that runs in seconds on
     CPU; this is what the serving CLI, the bench, and CI exercise;
@@ -22,15 +22,15 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.core import schedule as sched_lib
 from repro.core.quant import quantize_vision_params
-from repro.models import swin, vit
+from repro.models import swin, tnt, vit
 
 
 @dataclasses.dataclass(frozen=True)
 class VisionModel:
     name: str
-    family: str                       # "vit" | "swin"
+    family: str                       # "vit" | "swin" | "tnt"
     description: str
-    reduced: Callable[[], Any]        # -> ViTConfig | SwinConfig
+    reduced: Callable[[], Any]        # -> ViTConfig | SwinConfig | TNTConfig
     full: Callable[[], Any]
 
 
@@ -69,9 +69,18 @@ _register(VisionModel(
     full=lambda: swin.swin_t(),
 ))
 
+_register(VisionModel(
+    name="tnt_s", family="tnt",
+    description="TNT-S inner/outer dual stream; pixel blocks batch-folded "
+                "onto the (batch, head) grid; reduced = 32px 2-layer",
+    reduced=lambda: tnt.tnt_edge(),
+    full=lambda: tnt.tnt_s(),
+))
+
 
 def list_models() -> Tuple[str, ...]:
-    return tuple(_REGISTRY)
+    """Registered model names, sorted — deterministic CLI/bench order."""
+    return tuple(sorted(_REGISTRY))
 
 
 def get(name: str) -> VisionModel:
@@ -98,6 +107,8 @@ def build_cfg(name: str, *, full: bool = False,
 def _family_mod(cfg: Any):
     if isinstance(cfg, swin.SwinConfig):
         return swin
+    if isinstance(cfg, tnt.TNTConfig):
+        return tnt
     if isinstance(cfg, vit.ViTConfig):
         return vit
     raise TypeError(f"not a registered vision config: {type(cfg)!r}")

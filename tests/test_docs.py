@@ -1,0 +1,41 @@
+"""Docs integrity: every intra-repo link in README/ROADMAP/docs/*.md must
+resolve (the tier-1 twin of the CI ``check_doc_links`` step), and the
+onboarding docs the TNT PR introduced must keep existing."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_doc_links  # noqa: E402
+
+
+def test_intra_repo_doc_links_resolve(capsys):
+    assert check_doc_links.main([]) == 0, capsys.readouterr().out
+
+
+def test_checker_flags_broken_links(tmp_path):
+    md = tmp_path / "bad.md"
+    md.write_text("see [missing](./no_such_file.md) and "
+                  "[ok](https://example.com)\n")
+    assert check_doc_links.main([str(md)]) == 1
+
+
+def test_checker_skips_code_fences(tmp_path):
+    md = tmp_path / "fenced.md"
+    md.write_text("```\n[not a link](./no_such_file.md)\n```\n")
+    assert check_doc_links.main([str(md)]) == 0
+
+
+def test_checker_cli_entrypoint():
+    r = subprocess.run([sys.executable,
+                        os.path.join(REPO, "tools", "check_doc_links.py")],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_model_onboarding_docs_exist():
+    for rel in ("docs/MODELS.md", "docs/ARCHITECTURE.md"):
+        assert os.path.exists(os.path.join(REPO, rel)), rel

@@ -1,5 +1,6 @@
-"""Control-program layer: schedule compilation, the shared executor, and
-Swin through the batched pipeline (windowed kernels, shifted masks, int8).
+"""Control-program layer: schedule compilation, the shared executor, Swin
+through the batched pipeline (windowed kernels, shifted masks, int8), and
+TNT through the same pipeline (inner/outer phases, the pixel batch-fold).
 """
 
 import dataclasses
@@ -12,7 +13,7 @@ import pytest
 from repro.core import schedule as sched_lib
 from repro.core.quant import (Calibrator, QTensor, ptq_tolerance,
                               quantize_vision_params)
-from repro.models import swin, vision_registry, vit
+from repro.models import swin, tnt, vision_registry, vit
 
 
 @pytest.fixture(scope="module")
@@ -20,6 +21,16 @@ def swin_setup():
     cfg = swin.swin_edge()
     params = swin.init_params(jax.random.PRNGKey(0), cfg)
     imgs = np.random.default_rng(0).standard_normal(
+        (2, cfg.image, cfg.image, 3)).astype(np.float32)
+    patches = vit.extract_patches(jnp.asarray(imgs), cfg.patch)
+    return cfg, params, patches
+
+
+@pytest.fixture(scope="module")
+def tnt_setup():
+    cfg = tnt.tnt_edge()
+    params = tnt.init_params(jax.random.PRNGKey(0), cfg)
+    imgs = np.random.default_rng(3).standard_normal(
         (2, cfg.image, cfg.image, 3)).astype(np.float32)
     patches = vit.extract_patches(jnp.asarray(imgs), cfg.patch)
     return cfg, params, patches
@@ -215,18 +226,174 @@ def test_vit_calibration_sites_cover_every_phase():
 
 
 # ---------------------------------------------------------------------------
+# TNT through the batched control program (inner/outer dual stream)
+# ---------------------------------------------------------------------------
+
+
+def test_tnt_schedule_structure():
+    cfg = tnt.tnt_edge()                  # 4x4 patch grid, 4 pixels/patch
+    s = tnt.schedule(cfg)
+    assert s.counts() == {"embed": 1, "inner_msa": 2, "inner_mlp": 2,
+                          "fold": 2, "msa": 2, "mlp": 2, "head": 1}
+    embed = s.phases[0]
+    assert embed.pos_embed and embed.norm             # dual-stream frontend
+    assert embed.inner_tokens == cfg.inner_tokens == 4
+    # per layer: inner_msa -> inner_mlp -> fold -> msa -> mlp, in order
+    kinds = [p.kind for p in s.phases[1:-1]]
+    assert kinds == ["inner_msa", "inner_mlp", "fold", "msa", "mlp"] * 2
+    inner = [p for p in s.phases if p.kind == "inner_msa"]
+    assert [p.path for p in inner] == [("layers", 0, "inner"),
+                                       ("layers", 1, "inner")]
+    assert all(p.grid == (2, 2) and p.heads == cfg.inner_heads
+               and p.window == 0 for p in inner)      # global MSA, pixel grid
+    outer = [p for p in s.phases if p.kind == "msa"]
+    assert [p.path for p in outer] == [("layers", 0, "outer"),
+                                       ("layers", 1, "outer")]
+    assert all(p.grid == (4, 4) and p.heads == cfg.heads for p in outer)
+    folds = [p for p in s.phases if p.kind == "fold"]
+    assert [p.path for p in folds] == [("layers", 0), ("layers", 1)]
+    assert [p.site for p in folds] == ["l0.fold", "l1.fold"]
+
+
+def test_full_tnt_s_schedule_compiles():
+    s = tnt.schedule(tnt.tnt_s())
+    assert s.counts() == {"embed": 1, "inner_msa": 12, "inner_mlp": 12,
+                          "fold": 12, "msa": 12, "mlp": 12, "head": 1}
+    inner = [p for p in s.phases if p.kind == "inner_msa"]
+    assert all(p.grid == (4, 4) and p.heads == 4 for p in inner)  # 16 pixels
+    assert all(p.grid == (14, 14) for p in s.phases if p.kind == "msa")
+
+
+def test_pixel_partition_against_coordinate_oracle():
+    """pixel_partition row r, token t, element k must address the image
+    pixel the docstring promises — computed here independently from source
+    coordinates (the analogue of the shifted-window mask oracle)."""
+    b, image, patch, m = 2, 16, 8, 4
+    side, ms = image // patch, int(np.sqrt(m))
+    ip = patch // ms
+    n = side * side
+    # encode every pixel's identity: value = ((b * R + r) * C + c) * 3 + ch
+    img = np.arange(b * image * image * 3, dtype=np.float32
+                    ).reshape(b, image, image, 3)
+    patches = vit.extract_patches(jnp.asarray(img), patch)
+    sub = np.asarray(sched_lib.pixel_partition(patches, m))
+    assert sub.shape == (b * n, m, ip * ip * 3)
+    for r in range(b * n):
+        b_i, p_i = divmod(r, n)
+        pr, pc = divmod(p_i, side)
+        for t in range(m):
+            sr, sc = divmod(t, ms)
+            for k in range(ip * ip * 3):
+                q, ch = divmod(k, 3)
+                qr, qc = divmod(q, ip)
+                row = pr * patch + sr * ip + qr
+                col = pc * patch + sc * ip + qc
+                want = ((b_i * image + row) * image + col) * 3 + ch
+                assert sub[r, t, k] == want, (r, t, k)
+
+
+def test_pixel_partition_rejects_bad_geometry():
+    patches = jnp.zeros((1, 4, 8 * 8 * 3))
+    with pytest.raises(AssertionError):
+        sched_lib.pixel_partition(patches, 3)          # not a square
+    with pytest.raises(AssertionError):
+        sched_lib.pixel_partition(patches, 9)          # 8 % 3 != 0
+
+
+def test_tnt_schedule_matches_dense_reference(tnt_setup):
+    cfg, params, patches = tnt_setup
+    got = tnt.forward(params, patches, cfg)
+    want = tnt.reference_forward(params, patches, cfg)
+    assert got.shape == (patches.shape[0], cfg.n_classes)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_tnt_pallas_and_xla_backends_agree(tnt_setup):
+    cfg, params, patches = tnt_setup
+    a = tnt.forward(params, patches, cfg)
+    b = tnt.forward(params, patches,
+                    dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+def test_tnt_inner_blocks_change_result(tnt_setup):
+    """The inner stream must actually feed the outer one: skipping the
+    inner/fold phases changes the logits."""
+    cfg, params, patches = tnt_setup
+    base = tnt.forward(params, patches, cfg)
+    s = tnt.schedule(cfg)
+    pruned = tuple(p for p in s.phases
+                   if p.kind not in ("inner_msa", "inner_mlp", "fold"))
+    no_inner = sched_lib.run_schedule(
+        dataclasses.replace(s, phases=pruned), params, patches)
+    assert not np.allclose(base, no_inner, rtol=1e-3, atol=1e-3)
+
+
+def test_tnt_int8_within_calibration_tolerance(tnt_setup):
+    cfg, params, patches = tnt_setup
+    qparams = quantize_vision_params(params)
+    cal = Calibrator()
+    tnt.forward(qparams, patches, cfg, observer=cal)
+    cal.freeze()
+    qlogits = tnt.forward(qparams, patches, cfg, observer=cal)
+    logits = tnt.forward(params, patches, cfg)
+    scale = float(jnp.abs(logits).max())
+    err = float(jnp.abs(qlogits - logits).max())
+    assert err <= ptq_tolerance(scale), (err, scale)
+
+
+def test_quantize_vision_params_tnt_layout(tnt_setup):
+    cfg, params, _ = tnt_setup
+    qp = quantize_vision_params(params)
+    l0 = qp["layers"][0]
+    # inner and outer QKV both per-(head, out-channel), via the same keys
+    for blk, h, dh in ((l0["inner"], cfg.inner_heads, cfg.inner_head_dim),
+                       (l0["outer"], cfg.heads, cfg.head_dim)):
+        for k in ("wq", "wk", "wv"):
+            assert isinstance(blk[k], QTensor)
+            assert blk[k].scale.shape == (h, 1, dh)
+        assert isinstance(blk["w_msa"], QTensor)
+    # TNT-specific projections are per-channel; positions/norms stay float
+    assert isinstance(qp["pixel_embed"], QTensor)
+    assert isinstance(l0["fold_w"], QTensor)
+    assert not isinstance(qp["inner_pos_embed"], QTensor)
+    assert not isinstance(qp["pos_embed"], QTensor)
+    assert not isinstance(l0["fold_ln_w"], QTensor)
+    assert not isinstance(l0["fold_b"], QTensor)
+
+
+def test_tnt_calibration_sites_cover_every_phase(tnt_setup):
+    """Both streams' matmuls must calibrate: inner sites are prefixed
+    l{i}.inner, the fold l{i}.fold, the frontend pixel_embed."""
+    cfg, params, patches = tnt_setup
+    qp = quantize_vision_params(params)
+    cal = Calibrator()
+    tnt.forward(qp, patches[:1], cfg, observer=cal)
+    want = {"pixel_embed", "patch_embed", "head"}
+    for i in range(cfg.layers):
+        for pre in (f"l{i}", f"l{i}.inner"):
+            want |= {f"{pre}.qkv_in", f"{pre}.w_msa",
+                     f"{pre}.w_up", f"{pre}.w_down"}
+        want.add(f"l{i}.fold")
+    assert set(cal.amax) == want
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
 
 def test_registry_lists_the_paper_families():
     assert set(vision_registry.list_models()) == {"vit_edge", "deit_t",
-                                                  "swin_t"}
+                                                  "swin_t", "tnt_s"}
+    # sorted -> deterministic CLI/bench ordering across runs
+    assert list(vision_registry.list_models()) == \
+        sorted(vision_registry.list_models())
     with pytest.raises(KeyError):
         vision_registry.get("resnet50")
 
 
-@pytest.mark.parametrize("name", ["vit_edge", "deit_t", "swin_t"])
+@pytest.mark.parametrize("name", ["vit_edge", "deit_t", "swin_t", "tnt_s"])
 def test_registry_builds_and_schedules(name):
     cfg = vision_registry.build_cfg(name)
     s = vision_registry.make_schedule(cfg)

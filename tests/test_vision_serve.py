@@ -117,6 +117,27 @@ def test_server_int8_roundtrip_swin():
     assert err <= ptq_tolerance(scale), (err, scale)
 
 
+def test_server_int8_roundtrip_tnt():
+    """TNT through the served int8 PTQ path: both streams quantized,
+    calibrated, frozen, drained through the same VisionServer."""
+    cfg = vision_registry.build_cfg("tnt_s")
+    params = vision_registry.init_params(jax.random.PRNGKey(0), cfg)
+    qparams = vision_registry.quantize(params)
+    images = np.random.default_rng(3).standard_normal(
+        (4, cfg.image, cfg.image, 3)).astype(np.float32)
+    cal = calibrate(qparams, cfg, images[:2], n_batches=1)
+    out = {}
+    for mode in ("float", "int8"):
+        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
+                              mode=mode, buckets=(4,))
+        server.submit_many(images)
+        server.run()
+        out[mode] = np.stack([r.logits for r in server.done])
+    scale = np.abs(out["float"]).max()
+    err = np.abs(out["float"] - out["int8"]).max()
+    assert err <= ptq_tolerance(scale), (err, scale)
+
+
 def test_pallas_and_xla_backends_agree(tiny_setup):
     cfg, params, images = tiny_setup
     import dataclasses

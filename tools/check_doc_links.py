@@ -1,0 +1,92 @@
+"""Intra-repo docs link checker — keeps README/docs/*.md from rotting.
+
+Scans the given markdown files (default: README.md, ROADMAP.md and
+docs/*.md) for inline links and verifies that every RELATIVE target
+resolves to a real file or directory in the repo.  External links
+(http/https/mailto) and pure in-page anchors (#...) are skipped; a
+``file.md#anchor`` target is checked for the file part only.
+
+Exit is non-zero with one line per broken link (file, line, target) —
+wired as a CI step and wrapped by ``tests/test_docs.py`` so the tier-1
+suite enforces it too.
+
+Run:  python tools/check_doc_links.py [files...]
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+from typing import List, Tuple
+
+# inline markdown links [text](target); images ![alt](target) match too.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+DEFAULT_GLOBS = ("README.md", "ROADMAP.md", "docs/*.md")
+
+
+def iter_links(md_path: str) -> List[Tuple[int, str]]:
+    """(line number, target) for every inline link in the file."""
+    out = []
+    with open(md_path, encoding="utf-8") as f:
+        in_fence = False
+        for i, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK_RE.finditer(line):
+                out.append((i, m.group(1)))
+    return out
+
+
+def check_file(md_path: str, repo_root: str) -> List[str]:
+    """Broken-link descriptions for one markdown file."""
+    errors = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    for line_no, target in iter_links(md_path):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        # /-rooted targets are repo-rooted, not filesystem-rooted
+        resolved = os.path.normpath(
+            repo_root + path if os.path.isabs(path)
+            else os.path.join(base, path))
+        if not os.path.exists(resolved):
+            errors.append(f"{md_path}:{line_no}: broken link -> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if argv:
+        files = argv
+    else:
+        files = [p for g in DEFAULT_GLOBS
+                 for p in sorted(glob.glob(os.path.join(repo_root, g)))]
+    errors: List[str] = []
+    for md in files:
+        if not os.path.exists(md):
+            errors.append(f"{md}: file not found")
+            continue
+        errors.extend(check_file(md, repo_root))
+    for e in errors:
+        print(e)
+    if errors:
+        print(f"[check-doc-links] {len(errors)} broken link(s) "
+              f"in {len(files)} file(s)")
+        return 1
+    print(f"[check-doc-links] OK — {len(files)} file(s), all intra-repo "
+          f"links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
