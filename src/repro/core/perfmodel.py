@@ -474,6 +474,92 @@ def analyze(m: VisionModelSpec, hw: Optional[VitaHW] = None) -> PerfReport:
 
 
 # ---------------------------------------------------------------------------
+# Schedule-level phase attribution (fused vs per-phase execution)
+# ---------------------------------------------------------------------------
+#
+# `analyze` prices the paper's accelerator, whose phases already overlap.
+# The schedule *executor* additionally chooses between per-phase execution
+# (each msa / mlp a separate kernel, the (T, D) activation round-tripping
+# through off-chip memory at the boundary) and the fused `layer` phases of
+# `fuse_schedule` (one kernel chain, no boundary traffic).  The functions
+# below attribute expected cycles to each *schedule* phase kind so serving
+# can report measured-vs-modelled fusion speedup per model.
+
+
+def phase_boundary_cycles(hw: VitaHW, s: StageSpec,
+                          inner: bool = False) -> float:
+    """Cycles to write + re-read the fp32 activation at one msa->mlp phase
+    boundary — the off-chip round-trip the fused layer phase elides."""
+    if inner:
+        n = s.inner_tokens * s.tokens * s.n_windows
+        d = s.inner_dim
+    else:
+        n = s.tokens * s.n_windows
+        d = s.dim
+    return 2.0 * n * d * 4.0 / hw.dram_bytes_per_cycle
+
+
+def expected_phase_cycles(m: VisionModelSpec,
+                          hw: Optional[VitaHW] = None, *,
+                          fused: bool = False) -> Dict[str, float]:
+    """Expected cycles per `core.schedule` phase KIND for one image.
+
+    Keys mirror the compiled schedule: ``embed / msa / mlp / merge /
+    inner_msa / inner_mlp / fold`` unfused, with each msa+mlp pair
+    replaced by ``layer`` (and ``inner_layer``) when ``fused``.  Unfused
+    pairs carry the boundary round-trip (split between the two halves,
+    like the aux LN/residual/requant passes); fused layers elide it.
+    """
+    hw = hw or VitaHW()
+    out: Dict[str, float] = {}
+
+    def add(kind: str, cycles: float) -> None:
+        out[kind] = out.get(kind, 0.0) + float(cycles)
+
+    def add_pair(kind_msa: str, kind_mlp: str, kind_layer: str,
+                 msa_c: float, mlp_c: float, aux_c: float, bnd: float,
+                 layers: int) -> None:
+        if fused:
+            add(kind_layer, (msa_c + mlp_c + aux_c) * layers)
+        else:
+            add(kind_msa, (msa_c + aux_c / 2 + bnd / 2) * layers)
+            add(kind_mlp, (mlp_c + aux_c / 2 + bnd / 2) * layers)
+
+    add("embed", patch_embed_phase(hw, m).cycles)
+    for s in m.stages:
+        if s.inner_tokens:
+            inn = inner_stage(s)
+            add_pair("inner_msa", "inner_mlp", "inner_layer",
+                     sum(p.cycles for p in msa_phase(hw, inn)),
+                     mlp_phase(hw, inn).cycles, aux_phase(hw, inn).cycles,
+                     phase_boundary_cycles(hw, s, inner=True), s.layers)
+            add("fold", fold_phase(hw, s).cycles * s.layers)
+        add_pair("msa", "mlp", "layer",
+                 sum(p.cycles for p in msa_phase(hw, s)),
+                 mlp_phase(hw, s).cycles, aux_phase(hw, s).cycles,
+                 phase_boundary_cycles(hw, s), s.layers)
+        if s.patch_merging:
+            add("merge", patch_merging_phase(hw, s).cycles)
+    return out
+
+
+def fusion_speedup_model(m: VisionModelSpec,
+                         hw: Optional[VitaHW] = None) -> Dict[str, float]:
+    """Modelled end-to-end speedup of the fused schedule over the per-phase
+    one (the analytic counterpart of the bench's measured
+    ``fusion_speedup``): the only difference between the two totals is the
+    elided per-layer activation round-trips, so the ratio isolates the
+    phase-boundary cost."""
+    unfused = sum(expected_phase_cycles(m, hw, fused=False).values())
+    fused = sum(expected_phase_cycles(m, hw, fused=True).values())
+    return {
+        "unfused_cycles": unfused,
+        "fused_cycles": fused,
+        "modelled_speedup": unfused / fused,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Paper reference values for validation (Tables III, IV, V)
 # ---------------------------------------------------------------------------
 

@@ -30,10 +30,31 @@ Phases (mirroring the accelerator's phase sequencing):
                  outer stream
   * ``head``   — final LN -> mean pool -> classifier
 
+A second pass, `fuse_schedule`, collapses each ``msa`` + ``mlp`` pair of
+one encoder block (and each ``inner_msa`` + ``inner_mlp`` pair) into a
+single fused phase:
+
+  * ``layer`` / ``inner_layer`` — the WHOLE encoder block through one
+                 Pallas kernel chain (`kernels/vita_layer.py`): per-head
+                 MSA, head-sliced concat accumulation, both LayerNorms and
+                 both MLP matmuls without leaving the kernel grid — the
+                 cross-phase overlap ViTA's head-level pipelining achieves
+                 in hardware (Sec. III; the repeated off-chip activation
+                 traffic at phase boundaries is exactly what the design
+                 avoids).  Windowed (Swin) blocks fuse too: every per-token
+                 map commutes with the window fold, so the executor keeps
+                 the fold outside and runs the fused kernel on the
+                 (B*nW, n, C) layout.
+
 Models (`models/vit.py`, `models/swin.py`, `models/tnt.py`) no longer own
-forward loops: they emit a spec, `compile_schedule` turns it into phases,
-and `run_schedule` executes — float through the Pallas/XLA ops, or int8
-PTQ when the params are `QTensor`s and a calibrator observer is attached.
+forward loops: they emit a spec, `compile_schedule` turns it into phases
+(fused by default; ``fused=False`` on the config — or ``--no-fuse`` on the
+serving CLI — keeps the per-phase schedule for A/B), and `run_schedule`
+executes — float through the Pallas/XLA ops, or int8 PTQ when the params
+are `QTensor`s and a calibrator observer is attached.  int8 calibration
+always runs the phases unfused (the observer must see every intermediate
+activation); frozen-scale inference feeds the recorded per-site scales
+into the fused kernel's in-grid requant chain.
 """
 
 from __future__ import annotations
@@ -178,6 +199,41 @@ def compile_schedule(spec: VisionModelSpec, *, n_classes: int,
     return Schedule(name=spec.name, image=img_h, patch=spec.patch,
                     n_classes=n_classes, phases=tuple(phases),
                     backend=backend)
+
+
+# Phase-kind pairs the fusion pass may collapse; a new phase kind is
+# fusion-eligible only if it appears here (see docs/MODELS.md, step 2).
+FUSABLE_PAIRS = {
+    ("msa", "mlp"): "layer",
+    ("inner_msa", "inner_mlp"): "inner_layer",
+}
+
+
+def fuse_schedule(sched: Schedule) -> Schedule:
+    """Collapse adjacent msa->mlp (and inner_msa->inner_mlp) phases of one
+    encoder block into single fused ``layer`` / ``inner_layer`` phases.
+
+    Fusion requires the pair to address the same param subtree and
+    calibration site (i.e. to be the two halves of ONE block) — schedules
+    hand-edited to interleave blocks fall back to per-phase execution.
+    The fused phase inherits the msa half's geometry (window/shift/heads),
+    which is everything the fused kernel chain needs.
+    """
+    fused = []
+    i = 0
+    phases = sched.phases
+    while i < len(phases):
+        p = phases[i]
+        nxt = phases[i + 1] if i + 1 < len(phases) else None
+        kind = FUSABLE_PAIRS.get((p.kind, nxt.kind)) if nxt else None
+        if kind and nxt.path == p.path and nxt.site == p.site \
+                and nxt.grid == p.grid:
+            fused.append(dataclasses.replace(p, kind=kind))
+            i += 2
+        else:
+            fused.append(p)
+            i += 1
+    return dataclasses.replace(sched, phases=tuple(fused))
 
 
 # ---------------------------------------------------------------------------
@@ -349,6 +405,68 @@ def _mlp_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
     return x + y
 
 
+def _fused_layer_call(ph: Phase, bp: Any, xw: jax.Array, obs,
+                      quantized: bool, backend: Optional[str],
+                      bias: Optional[jax.Array],
+                      mask: Optional[jax.Array]) -> jax.Array:
+    """One fused encoder layer over (B', N, C) — B' is images, or
+    images * windows in W-MSA mode (the fold happens in `_layer_phase`)."""
+    if quantized:
+        # Frozen per-site activation scales feed the kernel's in-grid
+        # requant chain — the same four sites the unfused executor
+        # quantizes at, recorded by the (always unfused) calibration pass.
+        act_scales = jnp.stack([
+            obs.observe(f"{ph.site}.qkv_in", xw),
+            obs.observe(f"{ph.site}.w_msa", xw),
+            obs.observe(f"{ph.site}.w_up", xw),
+            obs.observe(f"{ph.site}.w_down", xw)]).reshape(4)
+        return ops.vita_layer_int8(
+            xw, bp["wq"].values, bp["wk"].values, bp["wv"].values,
+            bp["w_msa"].values, bp["w_up"].values, bp["w_down"].values,
+            act_scales, _head_scale(bp["wq"]), _head_scale(bp["wk"]),
+            _head_scale(bp["wv"]), bp["w_msa"].scale, bp["w_up"].scale,
+            bp["w_down"].scale, bp["ln1_w"], bp["ln1_b"], bp["ln2_w"],
+            bp["ln2_b"], bp["b_up"], bp["b_down"], bias, mask,
+            backend=backend).astype(xw.dtype)
+    return ops.vita_layer_fused(
+        xw, bp["wq"], bp["wk"], bp["wv"], bp["w_msa"], bp["ln1_w"],
+        bp["ln1_b"], bp["ln2_w"], bp["ln2_b"], bp["w_up"], bp["b_up"],
+        bp["w_down"], bp["b_down"], bias, mask, backend=backend)
+
+
+def _layer_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
+                 backend: Optional[str]) -> jax.Array:
+    """Fused encoder layer: msa -> concat -> mlp as one kernel chain.
+
+    int8 calibration (observer not yet frozen) falls back to the unfused
+    executors so the observer sees every intermediate activation at the
+    same site names the fused kernel later consumes frozen scales for.
+    """
+    if quantized and (obs is None or obs.frozen is None):
+        x = _msa_phase(ph, bp, x, obs, quantized, backend)
+        return _mlp_phase(ph, bp, x, obs, quantized, backend)
+    b, t, c = x.shape
+    if not ph.window:
+        return _fused_layer_call(ph, bp, x, obs, quantized, backend,
+                                 None, None)
+    # W-MSA: LN / concat / residual / MLP are all per-token maps, so the
+    # WHOLE fused layer commutes with the window permutation — fold the
+    # windows into the batch axis, run the fused chain, unfold.
+    gh, gw = ph.grid
+    xs = x.reshape(b, gh, gw, c)
+    if ph.shift:
+        xs = jnp.roll(xs, (-ph.shift, -ph.shift), axis=(1, 2))
+    xw = window_partition(xs, ph.window)                # (B*nW, n, C)
+    idx = jnp.asarray(rel_pos_index(ph.window))
+    bias = bp["rel_bias"][idx].transpose(2, 0, 1)       # (H, n, n)
+    mask = jnp.asarray(shifted_window_mask(gh, gw, ph.window, ph.shift))
+    yw = _fused_layer_call(ph, bp, xw, obs, quantized, backend, bias, mask)
+    y = window_reverse(yw, ph.window, gh, gw)
+    if ph.shift:
+        y = jnp.roll(y, (ph.shift, ph.shift), axis=(1, 2))
+    return y.reshape(b, t, c)
+
+
 def _fold_phase(ph: Phase, bp: Any, x: jax.Array, inner: jax.Array,
                 obs) -> jax.Array:
     """TNT re-entry: LN over each patch's flattened pixel tokens -> linear
@@ -412,6 +530,14 @@ def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
         elif ph.kind == "mlp":
             x = _mlp_phase(ph, _subtree(params, ph.path), x, obs,
                            quantized, sched.backend)
+        elif ph.kind == "layer":
+            x = _layer_phase(ph, _subtree(params, ph.path), x, obs,
+                             quantized, sched.backend)
+        elif ph.kind == "inner_layer":
+            # Fused inner block: the pixel stream through the same fused
+            # kernel chain (batch axis = images x patches).
+            inner = _layer_phase(ph, _subtree(params, ph.path), inner, obs,
+                                 quantized, sched.backend)
         elif ph.kind == "inner_msa":
             # The pixel stream's batch axis already carries images x
             # patches, so the SAME phase executors (and the same

@@ -24,6 +24,8 @@ from .head_attention import decode_attention as _decode_pallas
 from .head_attention import flash_attention as _flash_pallas
 from .int8_matmul import int8_matmul as _int8_pallas
 from .rglru_scan import rglru_scan as _rglru_pallas
+from .vita_layer import vita_layer as _vita_layer_pallas
+from .vita_layer import vita_layer_int8 as _vita_layer_int8_pallas
 from .vita_msa import vita_msa as _vita_msa_pallas
 from .vita_msa import vita_msa_batched as _vita_msa_batched_pallas
 from .vita_msa import vita_msa_int8 as _vita_msa_int8_pallas
@@ -137,30 +139,66 @@ def vita_msa(z, wq, wk, wv, *, backend: Optional[str] = None):
     return _vita_msa_pallas(z, wq, wk, wv, interpret=_interp())
 
 
-def vita_msa_batched(z, wq, wk, wv, bias=None, mask=None, *,
+def vita_msa_batched(z, wq, wk, wv, bias=None, mask=None, qkv_bias=None, *,
                      backend: Optional[str] = None):
     """Whole-batch per-head MSA: (B, N, D) -> (B, H, N, Dh), one kernel.
 
     ``bias`` (H, N, N) / ``mask`` (nW, N, N) select the windowed (Swin)
     mode — windows folded into the batch axis by the control program.
+    ``qkv_bias`` (3, H, Dh): optional per-head projection bias.
     """
     if get_backend(backend) == "xla":
-        return ref.vita_msa_batched_ref(z, wq, wk, wv, bias, mask)
-    return _vita_msa_batched_pallas(z, wq, wk, wv, bias, mask,
+        return ref.vita_msa_batched_ref(z, wq, wk, wv, bias, mask, qkv_bias)
+    return _vita_msa_batched_pallas(z, wq, wk, wv, bias, mask, qkv_bias,
                                     interpret=_interp())
 
 
 def vita_msa_int8(z_q, wq_q, wk_q, wv_q, x_scale, wq_scale, wk_scale,
-                  wv_scale, bias=None, mask=None, *,
+                  wv_scale, bias=None, mask=None, qkv_bias=None, *,
                   backend: Optional[str] = None):
     """int8 PTQ per-head MSA: (B, N, D) int8 -> (B, H, N, Dh) float32."""
     if get_backend(backend) == "xla":
         return ref.vita_msa_int8_ref(z_q, wq_q, wk_q, wv_q, x_scale,
                                      wq_scale, wk_scale, wv_scale,
-                                     bias, mask)
+                                     bias, mask, qkv_bias)
     return _vita_msa_int8_pallas(z_q, wq_q, wk_q, wv_q, x_scale,
                                  wq_scale, wk_scale, wv_scale, bias, mask,
-                                 interpret=_interp())
+                                 qkv_bias, interpret=_interp())
+
+
+def vita_layer_fused(x, wq, wk, wv, w_msa, ln1_w, ln1_b, ln2_w, ln2_b,
+                     w_up, b_up, w_down, b_down, bias=None, mask=None, *,
+                     backend: Optional[str] = None):
+    """One fused encoder layer (msa -> concat -> mlp): (B, N, D) float ->
+    (B, N, D), a single kernel chain with no phase-boundary HBM round-trip.
+    """
+    if get_backend(backend) == "xla":
+        return ref.vita_layer_ref(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
+                                  ln2_w, ln2_b, w_up, b_up, w_down, b_down,
+                                  bias, mask)
+    return _vita_layer_pallas(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
+                              ln2_w, ln2_b, w_up, b_up, w_down, b_down,
+                              bias, mask, interpret=_interp())
+
+
+def vita_layer_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
+                    act_scales, wq_scale, wk_scale, wv_scale, wmsa_scale,
+                    wup_scale, wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b,
+                    b_up, b_down, bias=None, mask=None, *,
+                    backend: Optional[str] = None):
+    """Fused int8 encoder layer with the requant chain (frozen calibration
+    ``act_scales`` = [qkv_in, w_msa, w_up, w_down]) inside the kernel."""
+    if get_backend(backend) == "xla":
+        return ref.vita_layer_int8_ref(
+            x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
+            wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale,
+            wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down,
+            bias, mask)
+    return _vita_layer_int8_pallas(
+        x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
+        wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale, wdown_scale,
+        ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down, bias, mask,
+        interpret=_interp())
 
 
 def linear_recurrence(a, b, *, backend: Optional[str] = None,
@@ -178,14 +216,11 @@ def linear_recurrence(a, b, *, backend: Optional[str] = None,
 
 def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
                eps: float = 1e-5) -> jax.Array:
-    """fp32-accumulated LayerNorm — the single definition shared by the
-    model layers and the schedule executor (ViTA's dedicated LN unit)."""
-    dt = x.dtype
-    xf = x.astype(jnp.float32)
-    mu = jnp.mean(xf, axis=-1, keepdims=True)
-    var = jnp.var(xf, axis=-1, keepdims=True)
-    y = (xf - mu) * jax.lax.rsqrt(var + eps)
-    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+    """fp32-accumulated LayerNorm (ViTA's dedicated LN unit).  The math
+    lives once in `ref.layer_norm_ref` — shared by the model layers, the
+    schedule executor and the fused layer kernel — this wrapper only
+    restores the input dtype."""
+    return ref.layer_norm_ref(x, w, b, eps).astype(x.dtype)
 
 
 def _largest_divisor(n: int, target: int) -> int:

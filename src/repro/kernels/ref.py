@@ -124,6 +124,15 @@ def vita_msa_ref(z: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
     return jnp.einsum("hnm,hme->hne", p, v).astype(z.dtype)
 
 
+def _qkv_with_bias(q, k, v, qkv_bias: Optional[jax.Array]):
+    """Add the optional (3, H, Dh) per-head Q/K/V projection bias to
+    (B, H, N, Dh) projections (post-requant in the int8 path)."""
+    if qkv_bias is None:
+        return q, k, v
+    qb = qkv_bias.astype(q.dtype)[:, None, :, None, :]     # (3, 1, H, 1, Dh)
+    return q + qb[0], k + qb[1], v + qb[2]
+
+
 def _window_extra(s: jax.Array, bias: Optional[jax.Array],
                   mask: Optional[jax.Array]) -> jax.Array:
     """Add rel-pos bias (H, N, N) and per-window mask (nW, N, N) to scores
@@ -141,17 +150,20 @@ def _window_extra(s: jax.Array, bias: Optional[jax.Array],
 def vita_msa_batched_ref(z: jax.Array, wq: jax.Array, wk: jax.Array,
                          wv: jax.Array, bias: Optional[jax.Array] = None,
                          mask: Optional[jax.Array] = None,
+                         qkv_bias: Optional[jax.Array] = None,
                          *, acc_dtype=jnp.float32) -> jax.Array:
     """Batched oracle: z (B, N, D); wq/wk/wv (H, D, Dh) -> (B, H, N, Dh).
 
     Windowed mode (Swin through the same batched path): windows are folded
     into the batch axis, ``bias``/``mask`` as in `vita_msa.vita_msa_batched`.
+    ``qkv_bias`` (3, H, Dh): optional per-head projection bias.
     """
     h, d, dh = wq.shape
     zf = z.astype(acc_dtype)
     q = jnp.einsum("bnd,hde->bhne", zf, wq.astype(acc_dtype))
     k = jnp.einsum("bnd,hde->bhne", zf, wk.astype(acc_dtype))
     v = jnp.einsum("bnd,hde->bhne", zf, wv.astype(acc_dtype))
+    q, k, v = _qkv_with_bias(q, k, v, qkv_bias)
     s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
     s = _window_extra(s, bias, mask)
     p = jax.nn.softmax(s, axis=-1)
@@ -163,14 +175,16 @@ def vita_msa_int8_ref(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
                       wq_scale: jax.Array, wk_scale: jax.Array,
                       wv_scale: jax.Array,
                       bias: Optional[jax.Array] = None,
-                      mask: Optional[jax.Array] = None) -> jax.Array:
+                      mask: Optional[jax.Array] = None,
+                      qkv_bias: Optional[jax.Array] = None) -> jax.Array:
     """int8 per-head MSA oracle.
 
     z_q: (B, N, D) int8; w*_q: (H, D, Dh) int8; x_scale scalar;
     w*_scale: (H, Dh).  Projections accumulate in int32 then requantize to
     fp32 (activation x per-(head, out-channel) weight scale); softmax and
     the attention-V product stay fp32 — ViTA's high-precision softmax unit.
-    ``bias``/``mask`` (windowed Swin mode) are added in fp32 pre-softmax.
+    ``bias``/``mask`` (windowed Swin mode) are added in fp32 pre-softmax;
+    ``qkv_bias`` (3, H, Dh) float is added after the requant.
     Returns (B, H, N, Dh) float32.
     """
     h, d, dh = wq_q.shape
@@ -185,10 +199,135 @@ def vita_msa_int8_ref(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
     q = proj(wq_q, wq_scale)
     k = proj(wk_q, wk_scale)
     v = proj(wv_q, wv_scale)
+    q, k, v = _qkv_with_bias(q, k, v, qkv_bias)
     s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
     s = _window_extra(s, bias, mask)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhnm,bhme->bhne", p, v)
+
+
+# ---------------------------------------------------------------------------
+# ViTA fused encoder layer (msa -> concat -> mlp, one chain) — oracle
+# ---------------------------------------------------------------------------
+
+
+def layer_norm_ref(x: jax.Array, w: jax.Array, b: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """fp32 LayerNorm (returns fp32) — the `ops.layer_norm` math."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y * w.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def _merge_qkv(wq: jax.Array, wk: jax.Array, wv: jax.Array) -> jax.Array:
+    """Per-head stacks (H, D, Dh) x3 -> one merged (D, 3·H·Dh) projection.
+
+    Only the FUSED layer may use this layout: the per-phase executor's
+    contract is the per-head kernel output (B, H, N, Dh), so the unfused
+    oracle must project head by head; inside a fused chain there is no
+    interface to honor, and batching the three stacks into a single GEMM
+    is one of the concrete wins fusion buys on a matmul machine.
+    """
+    h, d, dh = wq.shape
+    return jnp.concatenate(
+        [w.transpose(1, 0, 2).reshape(d, h * dh) for w in (wq, wk, wv)],
+        axis=1)
+
+
+def _split_qkv(qkv: jax.Array, h: int, dh: int):
+    """(B, N, 3·H·Dh) merged projections -> three (B, H, N, Dh)."""
+    b, n, _ = qkv.shape
+    parts = qkv.reshape(b, n, 3, h, dh).transpose(2, 0, 3, 1, 4)
+    return parts[0], parts[1], parts[2]
+
+
+def _attend_heads(q, k, v, dh: int, bias, mask):
+    """(B, H, N, Dh) q/k/v -> (B, N, H·Dh) merged attention output."""
+    s = jnp.einsum("bhne,bhme->bhnm", q, k) * (dh ** -0.5)
+    s = _window_extra(s, bias, mask)
+    p = jax.nn.softmax(s, axis=-1)
+    sa = jnp.einsum("bhnm,bhme->bhne", p, v)
+    b, h, n, _ = sa.shape
+    return sa.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def vita_layer_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                   wv: jax.Array, w_msa: jax.Array, ln1_w: jax.Array,
+                   ln1_b: jax.Array, ln2_w: jax.Array, ln2_b: jax.Array,
+                   w_up: jax.Array, b_up: jax.Array, w_down: jax.Array,
+                   b_down: jax.Array, bias: Optional[jax.Array] = None,
+                   mask: Optional[jax.Array] = None) -> jax.Array:
+    """Fused encoder-layer oracle: x (B, N, D) -> (B, N, D).
+
+    LN1 -> MSA -> concat projection -> residual -> LN2 -> MLP -> residual,
+    as one chain.  Because nothing inside the chain is an executor-visible
+    interface, the Q/K/V projections run as ONE merged GEMM
+    (`_merge_qkv`) instead of the per-head einsums the phase oracle is
+    bound to — same math, fused-only formulation freedom.
+    """
+    h, d, dh = wq.shape
+    z = layer_norm_ref(x, ln1_w, ln1_b)
+    qkv = jnp.dot(z, _merge_qkv(wq, wk, wv).astype(jnp.float32))
+    q, k, v = _split_qkv(qkv, h, dh)
+    merged = _attend_heads(q, k, v, dh, bias, mask)
+    h1 = x.astype(jnp.float32) + jnp.dot(merged,
+                                         w_msa.astype(jnp.float32))
+    z2 = layer_norm_ref(h1, ln2_w, ln2_b)
+    y = h1 + fused_mlp_ref(z2, w_up, b_up, w_down, b_down,
+                           activation="gelu")
+    return y.astype(x.dtype)
+
+
+def vita_layer_int8_ref(x: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
+                        wv_q: jax.Array, wmsa_q: jax.Array,
+                        wup_q: jax.Array, wdown_q: jax.Array,
+                        act_scales: jax.Array, wq_scale: jax.Array,
+                        wk_scale: jax.Array, wv_scale: jax.Array,
+                        wmsa_scale: jax.Array, wup_scale: jax.Array,
+                        wdown_scale: jax.Array, ln1_w: jax.Array,
+                        ln1_b: jax.Array, ln2_w: jax.Array,
+                        ln2_b: jax.Array, b_up: jax.Array,
+                        b_down: jax.Array,
+                        bias: Optional[jax.Array] = None,
+                        mask: Optional[jax.Array] = None) -> jax.Array:
+    """int8 fused encoder-layer oracle: the float activation stream with
+    every matmul input requantized at the frozen ``act_scales`` =
+    [qkv_in, w_msa, w_up, w_down] — the exact scale chain of the unfused
+    PTQ executor, so fused == unfused up to accumulation order (int8
+    GEMMs are exact in int32, so in practice bit-identical).  As in
+    `vita_layer_ref`, the Q/K/V projections run as one merged int8 GEMM
+    — fusion's formulation freedom; the per-(head, out-channel) requant
+    applies the same scale to the same int32 value either way."""
+    b, n, d = x.shape
+    h, _, dh = wq_q.shape
+    m = wup_q.shape[1]
+    s = jnp.asarray(act_scales, jnp.float32).reshape(4)
+
+    def quant(v, sc):
+        return jnp.clip(jnp.round(v / sc), -127.0, 127.0).astype(jnp.int8)
+
+    def requant_mm(v, sc, w_q, w_s, size):
+        acc = int8_matmul_ref(quant(v, sc), w_q)
+        return acc.astype(jnp.float32) * (
+            sc * w_s.astype(jnp.float32).reshape(size))
+
+    zq = quant(layer_norm_ref(x, ln1_w, ln1_b), s[0])
+    scale_vec = jnp.concatenate(
+        [ws.astype(jnp.float32).reshape(h * dh)
+         for ws in (wq_scale, wk_scale, wv_scale)])
+    qkv = int8_matmul_ref(zq, _merge_qkv(wq_q, wk_q, wv_q)
+                          ).astype(jnp.float32) * (s[0] * scale_vec)
+    q, k, v = _split_qkv(qkv, h, dh)
+    merged = _attend_heads(q, k, v, dh, bias, mask)
+    h1 = x.astype(jnp.float32) + requant_mm(merged, s[1], wmsa_q,
+                                            wmsa_scale, d)
+    z2 = layer_norm_ref(h1, ln2_w, ln2_b)
+    hid = jax.nn.gelu(requant_mm(z2, s[2], wup_q, wup_scale, m)
+                      + b_up.astype(jnp.float32))
+    return h1 + requant_mm(hid, s[3], wdown_q, wdown_scale, d) \
+        + b_down.astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -52,42 +52,52 @@ from jax.experimental.pallas import tpu as pltpu  # noqa: F401 (compat)
 from . import compat
 
 
-def _attend(q, k, v, o_ref, *, scale: float, out_dtype, extra=None):
-    """Engine 2: QK^T (PE block 4) -> softmax -> S.V (PE block 5)."""
+def softmax_av(q, k, v, *, scale: float, out_dtype=jnp.float32,
+               extra=None):
+    """Engine 2 core: QK^T (PE block 4) -> stable softmax -> S.V (PE
+    block 5).  The one in-kernel definition — `vita_layer` imports it."""
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if extra is not None:
         s = s + extra
     s = s - jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s)
     p = p / jnp.sum(p, axis=-1, keepdims=True)
-    o_ref[0, 0] = jnp.dot(p.astype(out_dtype), v.astype(out_dtype),
-                          preferred_element_type=jnp.float32
-                          ).astype(o_ref.dtype)
+    return jnp.dot(p.astype(out_dtype), v.astype(out_dtype),
+                   preferred_element_type=jnp.float32)
 
 
-def _vita_msa_kernel(z_ref, wq_ref, wk_ref, wv_ref, o_ref, *, scale: float):
+def _attend(q, k, v, o_ref, *, scale: float, out_dtype, extra=None):
+    o_ref[0, 0] = softmax_av(q, k, v, scale=scale, out_dtype=out_dtype,
+                             extra=extra).astype(o_ref.dtype)
+
+
+def _vita_msa_kernel(z_ref, wq_ref, wk_ref, wv_ref, *rest, scale: float,
+                     windowed: bool, has_qkv_bias: bool):
+    rest = list(rest)
+    o_ref = rest.pop()
+    qb = rest.pop(0)[:, 0] if has_qkv_bias else None       # (3, Dh)
+    extra = rest[0][0] + rest[1][0] if windowed else None
     z = z_ref[0]
     # Engine 1: per-head projections (PE blocks 1-3).
     q = jnp.dot(z, wq_ref[0], preferred_element_type=jnp.float32)
     k = jnp.dot(z, wk_ref[0], preferred_element_type=jnp.float32)
     v = jnp.dot(z, wv_ref[0], preferred_element_type=jnp.float32)
-    _attend(q, k, v, o_ref, scale=scale, out_dtype=z.dtype)
+    if qb is not None:
+        q = q + qb[0]
+        k = k + qb[1]
+        v = v + qb[2]
+    _attend(q, k, v, o_ref, scale=scale, out_dtype=z.dtype, extra=extra)
 
 
-def _vita_msa_win_kernel(z_ref, wq_ref, wk_ref, wv_ref, b_ref, m_ref,
-                         o_ref, *, scale: float):
-    z = z_ref[0]
-    q = jnp.dot(z, wq_ref[0], preferred_element_type=jnp.float32)
-    k = jnp.dot(z, wk_ref[0], preferred_element_type=jnp.float32)
-    v = jnp.dot(z, wv_ref[0], preferred_element_type=jnp.float32)
-    _attend(q, k, v, o_ref, scale=scale, out_dtype=z.dtype,
-            extra=b_ref[0] + m_ref[0])
+def _qkv_bias_spec(dh: int) -> pl.BlockSpec:
+    """(3, H, Dh) stacked per-head Q/K/V bias, selected by head index."""
+    return pl.BlockSpec((3, 1, dh), lambda i, j: (0, j, 0))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def vita_msa_batched(z: jax.Array, wq: jax.Array, wk: jax.Array,
                      wv: jax.Array, bias: jax.Array = None,
-                     mask: jax.Array = None, *,
+                     mask: jax.Array = None, qkv_bias: jax.Array = None, *,
                      interpret: bool = False) -> jax.Array:
     """z: (B, N, D); wq/wk/wv: (H, D, Dh) -> (B, H, N, Dh).
 
@@ -98,6 +108,10 @@ def vita_msa_batched(z: jax.Array, wq: jax.Array, wk: jax.Array,
     (B = images * nW) and passes ``bias`` (H, N, N) — per-head relative
     position bias — and ``mask`` (nW, N, N) — additive shifted-window region
     mask, window identity recovered as ``i % nW``.  Both or neither.
+
+    ``qkv_bias`` (3, H, Dh) optionally adds a per-head projection bias
+    (Q = zWq + b_q[h], ...) — the slot reference checkpoints' ``qkv.bias``
+    folds into.  Default None keeps the bias-free ViTA datapath.
     """
     if (bias is None) != (mask is None):
         raise ValueError("windowed mode needs both bias and mask "
@@ -106,20 +120,21 @@ def vita_msa_batched(z: jax.Array, wq: jax.Array, wk: jax.Array,
     h, _, dh = wq.shape
     w_spec = pl.BlockSpec((1, d, dh), lambda i, j: (j, 0, 0))
     z_spec = pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0))   # z stationary
-    if bias is None:
-        kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5)
-        in_specs = [z_spec, w_spec, w_spec, w_spec]
-        operands = (z, wq, wk, wv)
-    else:
+    in_specs = [z_spec, w_spec, w_spec, w_spec]
+    operands = [z, wq, wk, wv]
+    if qkv_bias is not None:
+        in_specs.append(_qkv_bias_spec(dh))
+        operands.append(qkv_bias.astype(jnp.float32))
+    if bias is not None:
         n_w = mask.shape[0]
-        kernel = functools.partial(_vita_msa_win_kernel, scale=dh ** -0.5)
-        in_specs = [
-            z_spec, w_spec, w_spec, w_spec,
+        in_specs += [
             pl.BlockSpec((1, n, n), lambda i, j: (j, 0, 0)),       # rel bias
             pl.BlockSpec((1, n, n), lambda i, j: (i % n_w, 0, 0)),  # region
         ]
-        operands = (z, wq, wk, wv, bias.astype(jnp.float32),
-                    mask.astype(jnp.float32))
+        operands += [bias.astype(jnp.float32), mask.astype(jnp.float32)]
+    kernel = functools.partial(_vita_msa_kernel, scale=dh ** -0.5,
+                               windowed=bias is not None,
+                               has_qkv_bias=qkv_bias is not None)
     return pl.pallas_call(
         kernel,
         grid=(b, h),
@@ -156,27 +171,24 @@ def _int8_proj(z, w_ref, ws_ref, xs):
 
 
 def _vita_msa_int8_kernel(z_ref, wq_ref, wk_ref, wv_ref, xs_ref,
-                          qs_ref, ks_ref, vs_ref, o_ref, *, scale: float):
+                          qs_ref, ks_ref, vs_ref, *rest, scale: float,
+                          windowed: bool, has_qkv_bias: bool):
+    rest = list(rest)
+    o_ref = rest.pop()
+    qb = rest.pop(0)[:, 0] if has_qkv_bias else None       # (3, Dh) fp32
+    extra = rest[0][0] + rest[1][0] if windowed else None
     z = z_ref[0]                         # (N, D) int8
     xs = xs_ref[0, 0]                    # per-tensor activation scale
     q = _int8_proj(z, wq_ref, qs_ref, xs)
     k = _int8_proj(z, wk_ref, ks_ref, xs)
     v = _int8_proj(z, wv_ref, vs_ref, xs)
-    _attend(q, k, v, o_ref, scale=scale, out_dtype=jnp.float32)
-
-
-def _vita_msa_int8_win_kernel(z_ref, wq_ref, wk_ref, wv_ref, xs_ref,
-                              qs_ref, ks_ref, vs_ref, b_ref, m_ref,
-                              o_ref, *, scale: float):
-    z = z_ref[0]
-    xs = xs_ref[0, 0]
-    q = _int8_proj(z, wq_ref, qs_ref, xs)
-    k = _int8_proj(z, wk_ref, ks_ref, xs)
-    v = _int8_proj(z, wv_ref, vs_ref, xs)
-    # Bias/mask are added after the requant, in the fp32 softmax stage —
-    # ViTA keeps softmax inputs high precision (dedicated softmax unit).
-    _attend(q, k, v, o_ref, scale=scale, out_dtype=jnp.float32,
-            extra=b_ref[0] + m_ref[0])
+    # The Q/K/V bias (like the window bias/mask) joins AFTER the requant, in
+    # fp32 — ViTA keeps the softmax inputs high precision.
+    if qb is not None:
+        q = q + qb[0]
+        k = k + qb[1]
+        v = v + qb[2]
+    _attend(q, k, v, o_ref, scale=scale, out_dtype=jnp.float32, extra=extra)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -184,7 +196,7 @@ def vita_msa_int8(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
                   wv_q: jax.Array, x_scale: jax.Array,
                   wq_scale: jax.Array, wk_scale: jax.Array,
                   wv_scale: jax.Array, bias: jax.Array = None,
-                  mask: jax.Array = None, *,
+                  mask: jax.Array = None, qkv_bias: jax.Array = None, *,
                   interpret: bool = False) -> jax.Array:
     """Fused int8 per-head MSA over the whole batch.
 
@@ -194,7 +206,8 @@ def vita_msa_int8(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
 
     Windowed mode mirrors `vita_msa_batched`: windows folded into the batch
     axis, ``bias`` (H, N, N) + ``mask`` (nW, N, N) added in fp32 before the
-    softmax.
+    softmax.  ``qkv_bias`` (3, H, Dh) is the optional float per-head
+    projection bias, added after the requant (default None: bias-free).
     """
     if (bias is None) != (mask is None):
         raise ValueError("windowed mode needs both bias and mask")
@@ -203,28 +216,28 @@ def vita_msa_int8(z_q: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
     x_scale = jnp.asarray(x_scale, jnp.float32).reshape(1, 1)
     w_spec = pl.BlockSpec((1, d, dh), lambda i, j: (j, 0, 0))
     s_spec = pl.BlockSpec((1, dh), lambda i, j: (j, 0))
-    base_specs = [
+    in_specs = [
         pl.BlockSpec((1, n, d), lambda i, j: (i, 0, 0)),       # z stationary
         w_spec, w_spec, w_spec,
         pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         s_spec, s_spec, s_spec,
     ]
-    scales = (wq_scale.astype(jnp.float32), wk_scale.astype(jnp.float32),
-              wv_scale.astype(jnp.float32))
-    if bias is None:
-        kernel = functools.partial(_vita_msa_int8_kernel, scale=dh ** -0.5)
-        in_specs = base_specs
-        operands = (z_q, wq_q, wk_q, wv_q, x_scale) + scales
-    else:
+    operands = [z_q, wq_q, wk_q, wv_q, x_scale,
+                wq_scale.astype(jnp.float32), wk_scale.astype(jnp.float32),
+                wv_scale.astype(jnp.float32)]
+    if qkv_bias is not None:
+        in_specs.append(_qkv_bias_spec(dh))
+        operands.append(qkv_bias.astype(jnp.float32))
+    if bias is not None:
         n_w = mask.shape[0]
-        kernel = functools.partial(_vita_msa_int8_win_kernel,
-                                   scale=dh ** -0.5)
-        in_specs = base_specs + [
+        in_specs += [
             pl.BlockSpec((1, n, n), lambda i, j: (j, 0, 0)),
             pl.BlockSpec((1, n, n), lambda i, j: (i % n_w, 0, 0)),
         ]
-        operands = (z_q, wq_q, wk_q, wv_q, x_scale) + scales + (
-            bias.astype(jnp.float32), mask.astype(jnp.float32))
+        operands += [bias.astype(jnp.float32), mask.astype(jnp.float32)]
+    kernel = functools.partial(_vita_msa_int8_kernel, scale=dh ** -0.5,
+                               windowed=bias is not None,
+                               has_qkv_bias=qkv_bias is not None)
     return pl.pallas_call(
         kernel,
         grid=(b, h),

@@ -94,16 +94,21 @@ class VisionServer:
         self.n_padded = 0
         self._rid = 0
         model_fwd = vision_registry.forward_fn(cfg)
+        # Patchify INSIDE the compiled program: the host-side drain then
+        # dispatches exactly one XLA call per micro-batch (the reshape
+        # fuses into the embed matmul instead of running eagerly per step).
         if self.mode == "int8":
             qp, frozen_cal = self.qparams, self.calibrator
 
-            def _fwd(patches):
-                return model_fwd(qp, patches, cfg, observer=frozen_cal)
+            def _fwd(images):
+                return model_fwd(qp, vit.extract_patches(images, cfg.patch),
+                                 cfg, observer=frozen_cal)
         else:
             p = self.params
 
-            def _fwd(patches):
-                return model_fwd(p, patches, cfg)
+            def _fwd(images):
+                return model_fwd(p, vit.extract_patches(images, cfg.patch),
+                                 cfg)
         # jit's own shape-keyed cache gives one compiled program per bucket.
         self._forward = jax.jit(_fwd)
 
@@ -139,8 +144,8 @@ class VisionServer:
                            images.dtype)
             images = np.concatenate([images, pad])
             self.n_padded += bucket - take
-        patches = vit.extract_patches(jnp.asarray(images), self.cfg.patch)
-        logits = np.asarray(jax.block_until_ready(self._forward(patches)))
+        logits = np.asarray(jax.block_until_ready(
+            self._forward(jnp.asarray(images))))
         t = time.perf_counter()
         for i, req in enumerate(batch):
             req.t_done = t
@@ -270,6 +275,9 @@ def main(argv=None):
                     default="both")
     ap.add_argument("--backend", choices=("xla", "pallas"), default=None,
                     help="kernel dispatch override (default: config's)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="keep the per-phase schedule (disable the fused "
+                         "msa+mlp layer kernels) — for A/B comparison")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None,
                     help="write stats as a BENCH_*.json-style record")
@@ -283,7 +291,8 @@ def main(argv=None):
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
     cfg = vision_registry.build_cfg(args.model, full=args.full,
-                                    backend=args.backend)
+                                    backend=args.backend,
+                                    fused=not args.no_fuse)
     modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
                             modes=modes, seed=args.seed, name=args.model)

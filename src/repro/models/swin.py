@@ -13,11 +13,13 @@ patch merging as an explicit schedule phase.
 Weights use the per-head `wq/wk/wv (H, D, Dh)` layout of `models/vit.py`,
 so the int8 PTQ path (per-(head, out-channel) weight scales, calibrated
 per-tensor activation scales) covers Swin with no new machinery.  NOTE:
-this layout has no QKV projection bias (reference Swin-T's `attn.qkv.bias`)
-— the shared kernels are bias-free, matching ViTA's datapath.  Models
-trained in-repo are unaffected; a future real-checkpoint loader must
-either fold the bias in as an extra kernel operand or reject biased
-checkpoints (see ROADMAP "Real weights + accuracy").
+in-repo params carry no QKV projection bias (matching ViTA's datapath),
+but the per-phase MSA kernels (`vita_msa_batched` / `vita_msa_int8`) now
+accept an optional per-head ``qkv_bias`` (3, H, Dh) operand in both
+float and int8 paths — the slot a real-checkpoint loader folds reference
+Swin-T's ``attn.qkv.bias`` into.  The fused ``vita_layer`` chain does
+NOT take it yet, so biased checkpoints must serve with ``fused=False``
+until it does (see ROADMAP "Real weights + accuracy").
 
 `reference_forward` keeps a direct dense einsum implementation (no shared
 kernels, no schedule) as the numerical oracle for the scheduled path.
@@ -51,6 +53,7 @@ class SwinConfig:
     n_classes: int = 1000
     backend: Optional[str] = None
     dtype: str = "float32"
+    fused: bool = True             # fuse msa+mlp pairs into layer phases
 
     @property
     def patch_dim(self) -> int:
@@ -159,9 +162,9 @@ def to_spec(cfg: SwinConfig) -> VisionModelSpec:
 
 @functools.lru_cache(maxsize=None)
 def schedule(cfg: SwinConfig) -> sched_lib.Schedule:
-    return sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
-                                      backend=cfg.backend,
-                                      hierarchical=True)
+    s = sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
+                                   backend=cfg.backend, hierarchical=True)
+    return sched_lib.fuse_schedule(s) if cfg.fused else s
 
 
 def forward(params: Params, patches: jax.Array, cfg: SwinConfig,

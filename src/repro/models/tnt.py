@@ -62,6 +62,7 @@ class TNTConfig:
     n_classes: int = 1000
     backend: Optional[str] = None
     dtype: str = "float32"
+    fused: bool = True             # fuse (inner_)msa+mlp pairs into layers
 
     @property
     def tokens(self) -> int:
@@ -206,9 +207,9 @@ def to_spec(cfg: TNTConfig) -> VisionModelSpec:
 
 @functools.lru_cache(maxsize=None)
 def schedule(cfg: TNTConfig) -> sched_lib.Schedule:
-    return sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
-                                      backend=cfg.backend,
-                                      hierarchical=False)
+    s = sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
+                                   backend=cfg.backend, hierarchical=False)
+    return sched_lib.fuse_schedule(s) if cfg.fused else s
 
 
 def forward(params: Params, patches: jax.Array, cfg: TNTConfig,

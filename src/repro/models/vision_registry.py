@@ -91,11 +91,14 @@ def get(name: str) -> VisionModel:
 
 
 def build_cfg(name: str, *, full: bool = False,
-              backend: Optional[str] = None) -> Any:
+              backend: Optional[str] = None,
+              fused: Optional[bool] = None) -> Any:
     entry = get(name)
     cfg = (entry.full if full else entry.reduced)()
     if backend is not None:
         cfg = dataclasses.replace(cfg, backend=backend)
+    if fused is not None:
+        cfg = dataclasses.replace(cfg, fused=fused)
     return cfg
 
 
@@ -125,6 +128,12 @@ def init_params(key, cfg: Any) -> Any:
 
 def make_schedule(cfg: Any) -> sched_lib.Schedule:
     return _family_mod(cfg).schedule(cfg)
+
+
+def make_spec(cfg: Any):
+    """The perfmodel `VisionModelSpec` for this config (the same stage
+    description the schedule compiler and the analytic model consume)."""
+    return _family_mod(cfg).to_spec(cfg)
 
 
 def quantize(params: Any) -> Any:

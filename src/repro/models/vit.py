@@ -45,6 +45,7 @@ class ViTConfig:
     n_classes: int = 1000
     backend: Optional[str] = None
     dtype: str = "float32"
+    fused: bool = True             # fuse msa+mlp pairs into layer phases
 
     @property
     def tokens(self) -> int:
@@ -142,10 +143,13 @@ def to_spec(cfg: ViTConfig) -> VisionModelSpec:
 
 @functools.lru_cache(maxsize=None)
 def schedule(cfg: ViTConfig) -> sched_lib.Schedule:
-    """Compile the config into the phase schedule `forward` replays."""
-    return sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
-                                      backend=cfg.backend,
-                                      hierarchical=False)
+    """Compile the config into the phase schedule `forward` replays.
+
+    With ``cfg.fused`` (the default) the msa+mlp pair of every encoder
+    block collapses into one fused ``layer`` phase (`fuse_schedule`)."""
+    s = sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
+                                   backend=cfg.backend, hierarchical=False)
+    return sched_lib.fuse_schedule(s) if cfg.fused else s
 
 
 def forward(params: Params, patches: jax.Array, cfg: ViTConfig,

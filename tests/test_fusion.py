@@ -1,0 +1,168 @@
+"""Schedule fusion: the fuse_schedule pass, the fused layer/inner_layer
+executor (one Pallas chain per encoder block), numerical identity with the
+per-phase executor in float and int8 for every registered model, and the
+``--no-fuse`` serving round-trip."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedule as sched_lib
+from repro.core.quant import Calibrator, ptq_tolerance
+from repro.launch import serve
+from repro.models import vision_registry, vit
+
+MODELS = vision_registry.list_models()
+
+
+@pytest.fixture(scope="module")
+def model_setups():
+    """Params + patches + (fused, unfused) configs per registered model."""
+    out = {}
+    for name in MODELS:
+        cfg = vision_registry.build_cfg(name)
+        ucfg = dataclasses.replace(cfg, fused=False)
+        params = vision_registry.init_params(jax.random.PRNGKey(0), cfg)
+        imgs = np.random.default_rng(7).standard_normal(
+            (2, cfg.image, cfg.image, 3)).astype(np.float32)
+        patches = vit.extract_patches(jnp.asarray(imgs), cfg.patch)
+        out[name] = (cfg, ucfg, params, patches)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The fusion pass itself
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_fused_phase_counts_match_unfused(name, model_setups):
+    """Every msa+mlp (and inner pair) collapses; nothing else changes."""
+    cfg, ucfg, _, _ = model_setups[name]
+    fc = vision_registry.make_schedule(cfg).counts()
+    uc = vision_registry.make_schedule(ucfg).counts()
+    assert fc.get("layer", 0) == uc.get("msa", 0) == uc.get("mlp", 0)
+    assert fc.get("inner_layer", 0) == uc.get("inner_msa", 0) \
+        == uc.get("inner_mlp", 0)
+    assert "msa" not in fc and "mlp" not in fc
+    assert "inner_msa" not in fc and "inner_mlp" not in fc
+    for kind in ("embed", "merge", "fold", "head"):
+        assert fc.get(kind, 0) == uc.get(kind, 0)
+    # total phase count shrinks by exactly the number of collapsed pairs
+    assert sum(fc.values()) == sum(uc.values()) - fc.get("layer", 0) \
+        - fc.get("inner_layer", 0)
+
+
+def test_fuse_schedule_inherits_msa_geometry_and_is_idempotent():
+    s = vision_registry.make_schedule(
+        vision_registry.build_cfg("swin_t", fused=False))
+    f = sched_lib.fuse_schedule(s)
+    msa = [p for p in s.phases if p.kind == "msa"]
+    layers = [p for p in f.phases if p.kind == "layer"]
+    assert [(p.window, p.shift, p.heads, p.path, p.site) for p in msa] == \
+        [(p.window, p.shift, p.heads, p.path, p.site) for p in layers]
+    assert sched_lib.fuse_schedule(f) == f      # already-fused: no-op
+
+
+def test_fuse_schedule_requires_same_block():
+    """Pairs from DIFFERENT blocks (interleaved schedules) must not fuse."""
+    cfg = vit.ViTConfig(name="t", image=16, patch=8, dim=32, heads=2,
+                        layers=2, n_classes=4, fused=False)
+    s = vit.schedule(cfg)
+    # swap the two mlp phases so each msa is followed by the OTHER block's
+    # mlp — paths no longer match, fusion must refuse
+    by_kind = {(p.kind, p.path): p for p in s.phases}
+    phases = []
+    for p in s.phases:
+        if p.kind == "mlp":
+            other = 1 - p.path[1]
+            phases.append(by_kind[("mlp", ("layers", other))])
+        else:
+            phases.append(p)
+    crossed = dataclasses.replace(s, phases=tuple(phases))
+    assert sched_lib.fuse_schedule(crossed).counts().get("layer", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Numerical identity: fused executor == per-phase executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_fused_matches_unfused_float(name, model_setups):
+    cfg, ucfg, params, patches = model_setups[name]
+    fwd = vision_registry.forward_fn(cfg)
+    fused = fwd(params, patches, cfg)
+    unfused = fwd(params, patches, ucfg)
+    np.testing.assert_allclose(fused, unfused, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_fused_matches_unfused_int8(name, model_setups):
+    """Calibrate once (the pass runs unfused under the hood), freeze, then
+    compare the fused in-kernel requant chain against the per-phase int8
+    executor — same scales, same int32 accumulations."""
+    cfg, ucfg, params, patches = model_setups[name]
+    fwd = vision_registry.forward_fn(cfg)
+    qparams = vision_registry.quantize(params)
+    cal = Calibrator()
+    fwd(qparams, patches, cfg, observer=cal)    # through the FUSED schedule
+    cal.freeze()
+    fused = fwd(qparams, patches, cfg, observer=cal)
+    unfused = fwd(qparams, patches, ucfg, observer=cal)
+    np.testing.assert_allclose(fused, unfused, rtol=1e-5, atol=1e-5)
+    # and the PTQ gate still holds end to end through the fused path
+    scale = float(jnp.abs(fwd(params, patches, cfg)).max())
+    err = float(jnp.abs(fused - fwd(params, patches, cfg)).max())
+    assert err <= ptq_tolerance(scale), (err, scale)
+
+
+@pytest.mark.parametrize("name", ["swin_t", "tnt_s"])
+def test_fused_pallas_backend_matches_xla(name, model_setups):
+    """The fused Pallas kernel chains (windowed W-MSA for Swin, the inner
+    pixel stream for TNT) agree with the fused jnp oracle."""
+    cfg, _, params, patches = model_setups[name]
+    fwd = vision_registry.forward_fn(cfg)
+    a = fwd(params, patches, cfg)
+    b = fwd(params, patches, dataclasses.replace(cfg, backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+def test_fused_int8_pallas_backend_matches_xla(model_setups):
+    cfg, _, params, patches = model_setups["swin_t"]
+    fwd = vision_registry.forward_fn(cfg)
+    qparams = vision_registry.quantize(params)
+    cal = Calibrator()
+    fwd(qparams, patches, cfg, observer=cal)
+    cal.freeze()
+    a = fwd(qparams, patches, cfg, observer=cal)
+    b = fwd(qparams, patches,
+            dataclasses.replace(cfg, backend="pallas"), observer=cal)
+    np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# --no-fuse round-trip through the serving CLI
+# ---------------------------------------------------------------------------
+
+
+def test_no_fuse_round_trips_through_serve_cli(capsys):
+    stats = serve.main(["--vision", "--model", "vit_edge", "--no-fuse",
+                        "--requests", "3", "--buckets", "1,2",
+                        "--mode", "float"])
+    assert stats and stats[0]["requests"] == 3
+    assert stats[0]["model"] == "vit_edge"
+    capsys.readouterr()
+
+
+def test_no_fuse_flag_reaches_the_schedule():
+    cfg = vision_registry.build_cfg("vit_edge", fused=False)
+    counts = vision_registry.make_schedule(cfg).counts()
+    assert "layer" not in counts and counts["msa"] > 0
+    # default build keeps fusion on
+    default = vision_registry.make_schedule(
+        vision_registry.build_cfg("vit_edge")).counts()
+    assert "msa" not in default and default["layer"] > 0

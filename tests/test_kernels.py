@@ -10,6 +10,7 @@ from repro.kernels import ref
 from repro.kernels.fused_mlp import fused_mlp
 from repro.kernels.head_attention import decode_attention, flash_attention
 from repro.kernels.int8_matmul import int8_matmul
+from repro.kernels.vita_layer import vita_layer, vita_layer_int8
 from repro.kernels.vita_msa import vita_msa, vita_msa_batched, vita_msa_int8
 
 
@@ -330,6 +331,149 @@ def test_vita_msa_int8_windowed_matches_ref(b, n_w, h):
     assert out.shape == (b * n_w, h, n, dh) and out.dtype == jnp.float32
     expect = ref.vita_msa_int8_ref(zq, wq, wk, wv, xs, qs, ss, vs,
                                    bias, mask)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+# -- optional per-head Q/K/V projection bias --------------------------------
+
+
+def test_vita_msa_qkv_bias_matches_ref_and_default_is_bias_free():
+    b, n, d, h, dh = 2, 32, 48, 4, 12
+    ks = jax.random.split(jax.random.PRNGKey(31), 5)
+    z = rand(ks[0], (b, n, d), scale=0.3)
+    ws = [rand(k, (h, d, dh), scale=0.05) for k in ks[1:4]]
+    qb = rand(ks[4], (3, h, dh), scale=0.2)
+    out = vita_msa_batched(z, *ws, None, None, qb, interpret=True)
+    expect = ref.vita_msa_batched_ref(z, *ws, qkv_bias=qb)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+    # the bias is live, and omitting it reproduces the bias-free kernel
+    base = vita_msa_batched(z, *ws, interpret=True)
+    assert not np.allclose(out, base, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(base, ref.vita_msa_batched_ref(z, *ws),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_vita_msa_qkv_bias_windowed():
+    b, n_w, n, d, h, dh = 2, 4, 49, 48, 3, 16
+    z, ws, bias, mask = _window_problem(jax.random.PRNGKey(32),
+                                        b, n_w, n, d, h, dh)
+    qb = rand(jax.random.PRNGKey(33), (3, h, dh), scale=0.2)
+    out = vita_msa_batched(z, *ws, bias, mask, qb, interpret=True)
+    expect = ref.vita_msa_batched_ref(z, *ws, bias, mask, qb)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_vita_msa_int8_qkv_bias_matches_ref():
+    """int8 path: the float bias joins after the requant, in fp32 (the
+    high-precision softmax stage) — checkpoint qkv.bias needs no quant."""
+    b, n, d, h, dh = 2, 32, 48, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(34), 8)
+    zq = jax.random.randint(ks[0], (b, n, d), -127, 128, jnp.int8)
+    wq, wk, wv = (jax.random.randint(k, (h, d, dh), -127, 128, jnp.int8)
+                  for k in ks[1:4])
+    xs = jnp.asarray(0.012)
+    qs, ss, vs = (jax.random.uniform(k, (h, dh), minval=1e-3, maxval=0.03)
+                  for k in ks[4:7])
+    qb = rand(ks[7], (3, h, dh), scale=0.2)
+    out = vita_msa_int8(zq, wq, wk, wv, xs, qs, ss, vs, None, None, qb,
+                        interpret=True)
+    expect = ref.vita_msa_int8_ref(zq, wq, wk, wv, xs, qs, ss, vs,
+                                   qkv_bias=qb)
+    # int8-range scores make the softmax sharp; fp32 reassociation between
+    # the kernel and the einsum oracle shows up at ~1e-4 relative
+    np.testing.assert_allclose(out, expect, rtol=2e-4, atol=2e-4)
+    base = vita_msa_int8(zq, wq, wk, wv, xs, qs, ss, vs, interpret=True)
+    assert not np.allclose(out, base, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# vita_layer (fused encoder layer: msa -> concat -> mlp, one kernel chain)
+# ---------------------------------------------------------------------------
+
+
+def _layer_problem(key, b, n, d, h, m):
+    ks = jax.random.split(key, 8)
+    dh = d // h
+    x = rand(ks[0], (b, n, d), scale=0.3)
+    ws = [rand(k, (h, d, dh), scale=0.05) for k in ks[1:4]]
+    w_msa = rand(ks[4], (d, d), scale=0.05)
+    lns = (jnp.ones(d), jnp.zeros(d), jnp.ones(d), jnp.zeros(d))
+    mlp = (rand(ks[5], (d, m), scale=0.05), rand(ks[6], (m,), scale=0.05),
+           rand(ks[7], (m, d), scale=0.05), jnp.zeros((d,)))
+    return x, ws, w_msa, lns, mlp
+
+
+@pytest.mark.parametrize("b,n,d,h,m", [(2, 16, 48, 4, 96),
+                                       (1, 49, 48, 3, 192),
+                                       (3, 64, 96, 4, 384)])
+def test_vita_layer_matches_ref(b, n, d, h, m):
+    x, ws, w_msa, lns, mlp = _layer_problem(jax.random.PRNGKey(41),
+                                            b, n, d, h, m)
+    out = vita_layer(x, *ws, w_msa, *lns, *mlp, interpret=True)
+    expect = ref.vita_layer_ref(x, *ws, w_msa, *lns, *mlp)
+    assert out.shape == x.shape
+    np.testing.assert_allclose(out, expect, rtol=3e-5, atol=3e-5)
+
+
+def test_vita_layer_matches_the_unfused_composition():
+    """The fused chain == LN -> msa -> concat -> residual -> LN -> mlp ->
+    residual composed from the per-phase oracles (phase-boundary math)."""
+    b, n, d, h, m = 2, 32, 48, 4, 96
+    x, ws, w_msa, lns, mlp = _layer_problem(jax.random.PRNGKey(42),
+                                            b, n, d, h, m)
+    out = vita_layer(x, *ws, w_msa, *lns, *mlp, interpret=True)
+    z = ref.layer_norm_ref(x, lns[0], lns[1]).astype(x.dtype)
+    sa = ref.vita_msa_batched_ref(z, *ws)
+    h1 = x + sa.transpose(0, 2, 1, 3).reshape(b, n, d) @ w_msa
+    z2 = ref.layer_norm_ref(h1, lns[2], lns[3]).astype(x.dtype)
+    want = h1 + ref.fused_mlp_ref(z2, mlp[0], mlp[1], mlp[2], mlp[3],
+                                  activation="gelu")
+    np.testing.assert_allclose(out, want, rtol=3e-5, atol=3e-5)
+
+
+def test_vita_layer_windowed_matches_ref():
+    b, n_w, n, d, h, m = 2, 4, 49, 48, 3, 96
+    x, ws, w_msa, lns, mlp = _layer_problem(jax.random.PRNGKey(43),
+                                            b * n_w, n, d, h, m)
+    bias = rand(jax.random.PRNGKey(44), (h, n, n), scale=0.5)
+    keep = jax.random.bernoulli(jax.random.PRNGKey(45), 0.8, (n_w, n, n))
+    mask = jnp.where(keep | jnp.eye(n, dtype=bool)[None], 0.0, -1e30)
+    out = vita_layer(x, *ws, w_msa, *lns, *mlp, bias, mask, interpret=True)
+    expect = ref.vita_layer_ref(x, *ws, w_msa, *lns, *mlp, bias, mask)
+    np.testing.assert_allclose(out, expect, rtol=3e-5, atol=3e-5)
+
+
+def _int8_layer_problem(key, b, n, d, h, m):
+    from repro.core.quant import amax_scale, quantize, quantize_per_channel
+    dh = d // h
+    x, ws, w_msa, lns, mlp = _layer_problem(key, b, n, d, h, m)
+    qkv = [quantize(w, amax_scale(w, axis=(1,))) for w in ws]
+    qmsa = quantize_per_channel(w_msa)
+    qup, qdown = quantize_per_channel(mlp[0]), quantize_per_channel(mlp[2])
+    acts = jnp.asarray([0.01, 0.008, 0.012, 0.009], jnp.float32)
+    args = (x, qkv[0].values, qkv[1].values, qkv[2].values, qmsa.values,
+            qup.values, qdown.values, acts,
+            *[q.scale.reshape(h, dh) for q in qkv],
+            qmsa.scale, qup.scale, qdown.scale, *lns, mlp[1], mlp[3])
+    return args
+
+
+def test_vita_layer_int8_matches_ref():
+    args = _int8_layer_problem(jax.random.PRNGKey(46), 2, 32, 48, 4, 96)
+    out = vita_layer_int8(*args, interpret=True)
+    expect = ref.vita_layer_int8_ref(*args)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_vita_layer_int8_windowed_matches_ref():
+    b, n_w, n, d, h, m = 1, 4, 49, 48, 3, 96
+    args = _int8_layer_problem(jax.random.PRNGKey(47), b * n_w, n, d, h, m)
+    bias = rand(jax.random.PRNGKey(48), (h, n, n), scale=0.5)
+    keep = jax.random.bernoulli(jax.random.PRNGKey(49), 0.8, (n_w, n, n))
+    mask = jnp.where(keep | jnp.eye(n, dtype=bool)[None], 0.0, -1e30)
+    out = vita_layer_int8(*args, bias, mask, interpret=True)
+    expect = ref.vita_layer_int8_ref(*args, bias, mask)
     np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
 
 

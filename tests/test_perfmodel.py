@@ -97,3 +97,53 @@ def test_config_generalization_swin():
     r = pm.analyze(pm.PAPER_MODELS["swin_t_224"])
     assert 0.3 < r.hue < 1.0
     assert r.fps > 1.0
+
+
+# ---------------------------------------------------------------------------
+# Schedule-level phase attribution (fused vs per-phase execution)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["vit_b16_256", "deit_t_224",
+                                  "swin_t_224", "tnt_s_224"])
+def test_expected_phase_cycles_fused_vs_unfused(name):
+    """The fused table collapses each msa+mlp pair into `layer` and the
+    only cycles it drops are the per-layer boundary round-trips."""
+    spec = pm.PAPER_MODELS[name]
+    unfused = pm.expected_phase_cycles(spec, fused=False)
+    fused = pm.expected_phase_cycles(spec, fused=True)
+    assert "layer" in fused and "msa" not in fused and "mlp" not in fused
+    assert "layer" not in unfused and "msa" in unfused
+    boundaries = sum(
+        s.layers * (pm.phase_boundary_cycles(pm.VitaHW(), s)
+                    + (pm.phase_boundary_cycles(pm.VitaHW(), s, inner=True)
+                       if s.inner_tokens else 0.0))
+        for s in spec.stages)
+    assert boundaries > 0
+    assert abs(sum(unfused.values()) - sum(fused.values())
+               - boundaries) < 1e-6 * sum(unfused.values())
+    # non-fusable kinds are attributed identically in both tables
+    for kind in ("embed", "merge", "fold"):
+        assert unfused.get(kind, 0.0) == fused.get(kind, 0.0)
+
+
+def test_expected_phase_cycles_kinds_match_the_compiled_schedule():
+    """Attribution keys line up with the kinds `compile_schedule` /
+    `fuse_schedule` actually emit (head is unpriced, as in `analyze`)."""
+    from repro.core import schedule as sched_lib
+    for name, hier in (("swin_t_224", True), ("tnt_s_224", False)):
+        spec = pm.PAPER_MODELS[name]
+        for fused in (False, True):
+            s = sched_lib.compile_schedule(spec, n_classes=10,
+                                           hierarchical=hier)
+            if fused:
+                s = sched_lib.fuse_schedule(s)
+            table = pm.expected_phase_cycles(spec, fused=fused)
+            assert set(table) == set(s.counts()) - {"head"}
+
+
+def test_fusion_speedup_model_is_a_real_speedup():
+    for name in ("vit_b16_256", "deit_t_224", "swin_t_224", "tnt_s_224"):
+        r = pm.fusion_speedup_model(pm.PAPER_MODELS[name])
+        assert r["fused_cycles"] < r["unfused_cycles"]
+        assert 1.0 < r["modelled_speedup"] < 2.0, (name, r)

@@ -43,7 +43,7 @@ def tnt_setup():
 
 def test_vit_schedule_structure():
     cfg = vit.ViTConfig(name="t", image=32, patch=8, dim=64, heads=4,
-                        layers=3, n_classes=10)
+                        layers=3, n_classes=10, fused=False)
     s = vit.schedule(cfg)
     assert s.counts() == {"embed": 1, "msa": 3, "mlp": 3, "head": 1}
     embed = s.phases[0]
@@ -53,10 +53,16 @@ def test_vit_schedule_structure():
     msa = [p for p in s.phases if p.kind == "msa"]
     assert [p.path for p in msa] == [("layers", i) for i in range(3)]
     assert all(p.grid == (4, 4) and p.heads == cfg.heads for p in msa)
+    # fused (the default): each msa+mlp pair collapses into one layer phase
+    fs = vit.schedule(dataclasses.replace(cfg, fused=True))
+    assert fs.counts() == {"embed": 1, "layer": 3, "head": 1}
+    layers = [p for p in fs.phases if p.kind == "layer"]
+    assert [p.path for p in layers] == [p.path for p in msa]
+    assert all(p.grid == (4, 4) and p.heads == cfg.heads for p in layers)
 
 
 def test_swin_schedule_structure():
-    cfg = swin.swin_edge()                            # 14x14 -> merge -> 7x7
+    cfg = swin.swin_edge(fused=False)                 # 14x14 -> merge -> 7x7
     s = swin.schedule(cfg)
     assert s.counts() == {"embed": 1, "msa": 4, "mlp": 4, "merge": 1,
                           "head": 1}
@@ -71,15 +77,25 @@ def test_swin_schedule_structure():
     assert msa[0].path == ("stages", 0, "blocks", 0)
     merge = next(p for p in s.phases if p.kind == "merge")
     assert merge.path == ("stages", 0) and merge.grid == (14, 14)
+    # fused: windowed blocks fuse too, inheriting the msa half's geometry
+    fs = swin.schedule(swin.swin_edge())
+    assert fs.counts() == {"embed": 1, "layer": 4, "merge": 1, "head": 1}
+    layers = [p for p in fs.phases if p.kind == "layer"]
+    assert [p.shift for p in layers] == [0, 3, 0, 0]
+    assert all(p.window == 7 for p in layers)
 
 
 def test_full_swin_t_schedule_compiles():
-    s = swin.schedule(swin.swin_t())
+    s = swin.schedule(swin.swin_t(fused=False))
     assert s.counts() == {"embed": 1, "msa": 12, "mlp": 12, "merge": 3,
                           "head": 1}
     shifts = [p.shift for p in s.phases if p.kind == "msa"]
     # last stage is 7x7 = one window -> shift elided there only
     assert shifts == [0, 3] * 5 + [0, 0]
+    fs = swin.schedule(swin.swin_t())
+    assert fs.counts() == {"embed": 1, "layer": 12, "merge": 3, "head": 1}
+    assert [p.shift for p in fs.phases
+            if p.kind == "layer"] == shifts
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +187,8 @@ def test_swin_shift_changes_result(swin_setup):
     cfg, params, patches = swin_setup
     base = swin.forward(params, patches, cfg)
     s = swin.schedule(cfg)
-    phases = tuple(dataclasses.replace(p, shift=0) if p.kind == "msa"
+    phases = tuple(dataclasses.replace(p, shift=0)
+                   if p.kind in ("msa", "layer")
                    else p for p in s.phases)
     noshift = sched_lib.run_schedule(
         dataclasses.replace(s, phases=phases), params, patches)
@@ -231,7 +248,8 @@ def test_vit_calibration_sites_cover_every_phase():
 
 
 def test_tnt_schedule_structure():
-    cfg = tnt.tnt_edge()                  # 4x4 patch grid, 4 pixels/patch
+    # 4x4 patch grid, 4 pixels/patch
+    cfg = tnt.tnt_edge(fused=False)
     s = tnt.schedule(cfg)
     assert s.counts() == {"embed": 1, "inner_msa": 2, "inner_mlp": 2,
                           "fold": 2, "msa": 2, "mlp": 2, "head": 1}
@@ -253,15 +271,24 @@ def test_tnt_schedule_structure():
     folds = [p for p in s.phases if p.kind == "fold"]
     assert [p.path for p in folds] == [("layers", 0), ("layers", 1)]
     assert [p.site for p in folds] == ["l0.fold", "l1.fold"]
+    # fused: BOTH streams' pairs collapse; fold stays its own phase
+    fs = tnt.schedule(tnt.tnt_edge())
+    assert fs.counts() == {"embed": 1, "inner_layer": 2, "fold": 2,
+                           "layer": 2, "head": 1}
+    kinds = [p.kind for p in fs.phases[1:-1]]
+    assert kinds == ["inner_layer", "fold", "layer"] * 2
 
 
 def test_full_tnt_s_schedule_compiles():
-    s = tnt.schedule(tnt.tnt_s())
+    s = tnt.schedule(tnt.tnt_s(fused=False))
     assert s.counts() == {"embed": 1, "inner_msa": 12, "inner_mlp": 12,
                           "fold": 12, "msa": 12, "mlp": 12, "head": 1}
     inner = [p for p in s.phases if p.kind == "inner_msa"]
     assert all(p.grid == (4, 4) and p.heads == 4 for p in inner)  # 16 pixels
     assert all(p.grid == (14, 14) for p in s.phases if p.kind == "msa")
+    fs = tnt.schedule(tnt.tnt_s())
+    assert fs.counts() == {"embed": 1, "inner_layer": 12, "fold": 12,
+                           "layer": 12, "head": 1}
 
 
 def test_pixel_partition_against_coordinate_oracle():
@@ -323,7 +350,8 @@ def test_tnt_inner_blocks_change_result(tnt_setup):
     base = tnt.forward(params, patches, cfg)
     s = tnt.schedule(cfg)
     pruned = tuple(p for p in s.phases
-                   if p.kind not in ("inner_msa", "inner_mlp", "fold"))
+                   if p.kind not in ("inner_msa", "inner_mlp",
+                                     "inner_layer", "fold"))
     no_inner = sched_lib.run_schedule(
         dataclasses.replace(s, phases=pruned), params, patches)
     assert not np.allclose(base, no_inner, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_vision_serve.json files (baseline vs candidate).
+
+Joins bench rows on (model, mode, batch, fused) and prints per-row
+throughput / p50 / p99 deltas plus a per-model summary (including the
+recorded fusion_speedup movement), flagging rows that appear in only one
+file.  Intended uses:
+
+  * CI: non-blocking report of the PR's bench against the committed
+    baseline (`.github/workflows/ci.yml` snapshots the checked-in JSON
+    before the bench overwrites it);
+  * local A/B across commits: run the bench on two checkouts and diff the
+    artifacts (see README "reading the bench JSON").
+
+Exit code is 0 unless ``--strict PCT`` is given AND some joined row's
+throughput regressed by more than PCT percent (for opt-in gating).
+
+Run:  python tools/compare_bench.py BASELINE.json CANDIDATE.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+Key = Tuple[str, str, int, bool]
+
+
+def load_rows(path: str) -> Dict[Key, dict]:
+    with open(path) as f:
+        record = json.load(f)
+    rows = {}
+    for r in record.get("runs", []):
+        # pre-fusion files have no "fused" field: those rows ARE the
+        # per-phase executor, so join them as fused=False
+        key = (r["model"], r["mode"], int(r.get("batch", 0)),
+               bool(r.get("fused", False)))
+        rows[key] = r
+    return rows
+
+
+def _pct(new: float, old: float) -> float:
+    return (new / old - 1.0) * 100.0 if old else float("inf")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="compare_bench")
+    ap.add_argument("baseline", help="baseline BENCH_vision_serve.json")
+    ap.add_argument("candidate", help="candidate BENCH_vision_serve.json")
+    ap.add_argument("--strict", type=float, default=None, metavar="PCT",
+                    help="exit non-zero if any row's throughput regresses "
+                         "more than PCT%% (default: report only)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    cand = load_rows(args.candidate)
+    joined = sorted(set(base) & set(cand))
+    only_base = sorted(set(base) - set(cand))
+    only_cand = sorted(set(cand) - set(base))
+
+    hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
+           f"{'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
+           f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7}")
+    print(f"[compare-bench] {args.baseline} -> {args.candidate}: "
+          f"{len(joined)} joined rows")
+    print(hdr)
+    print("-" * len(hdr))
+    worst = 0.0
+    for key in joined:
+        b, c = base[key], cand[key]
+        dthr = _pct(c["throughput_img_s"], b["throughput_img_s"])
+        dp50 = _pct(c["latency_p50_ms"], b["latency_p50_ms"])
+        worst = min(worst, dthr)
+        model, mode, batch, fused = key
+        print(f"{model:<10} {mode:<6} {batch:>5} "
+              f"{'fused' if fused else 'unfused':<7} "
+              f"{b['throughput_img_s']:>10.1f} "
+              f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "
+              f"{b['latency_p50_ms']:>8.2f} {c['latency_p50_ms']:>8.2f} "
+              f"{dp50:>+7.1f}")
+
+    models = sorted({k[0] for k in joined})
+    for m in models:
+        olds = [base[k].get("fusion_speedup") for k in joined
+                if k[0] == m and base[k].get("fusion_speedup")]
+        news = [cand[k].get("fusion_speedup") for k in joined
+                if k[0] == m and cand[k].get("fusion_speedup")]
+        if news:
+            old_s = (f"{min(olds):.3f}..{max(olds):.3f}" if olds
+                     else "n/a (pre-fusion baseline)")
+            print(f"[compare-bench] {m}: fusion_speedup "
+                  f"{old_s} -> {min(news):.3f}..{max(news):.3f}")
+    for key in only_base:
+        print(f"[compare-bench] only in baseline: {key}")
+    for key in only_cand:
+        print(f"[compare-bench] only in candidate: {key}")
+
+    if args.strict is not None and worst < -abs(args.strict):
+        print(f"[compare-bench] FAIL: worst throughput delta {worst:+.1f}% "
+              f"exceeds --strict {args.strict}%")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
