@@ -14,10 +14,21 @@ the measured-vs-modelled comparison in one artifact.  Rows are sorted by
 (model, mode, batch, fused) so `tools/compare_bench.py` diffs are stable
 across runs.
 
+On a multi-device host (CI fakes 8 CPU devices via ``XLA_FLAGS``) each
+model additionally emits SHARDED rows: the fused schedule drained through
+a data-parallel ``("data",)`` mesh over every visible device, float and
+int8, with the sharded logits gated against the single-device rows under
+the same calibration tolerance.  Every row records ``devices`` (the
+mesh's data-axis size; 1 for unsharded rows) and ``device_count``
+(`jax.device_count()` of the run) so `tools/compare_bench.py` can join on
+(model, mode, batch, fused, devices) across hosts.
+
 The bench FAILS (non-zero exit) if any registered model is missing a bench
-row, if a model's int8 logits drift outside the calibration tolerance, or
-if the fused schedule's logits drift from the unfused executor beyond the
-same tolerance — CI runs ``--smoke`` and uploads the JSON as an artifact.
+row, if a model's int8 logits drift outside the calibration tolerance, if
+the fused schedule's logits drift from the unfused executor beyond the
+same tolerance, or if a sharded drain's logits drift from the
+single-device path — CI runs ``--smoke`` and uploads the JSON as an
+artifact.
 
 Run:  PYTHONPATH=src python benchmarks/vision_serve_bench.py [--smoke]
 """
@@ -67,8 +78,9 @@ def _timed_ab_drains(servers: dict, images: np.ndarray,
 
 def bench_model(name: str, *, requests: int, batches, repeats: int,
                 seed: int = 0):
-    """One model through {float,int8} x batch buckets x {fused,unfused};
-    returns (rows, ptq_parity, fusion_parity)."""
+    """One model through {float,int8} x batch buckets x {fused,unfused}
+    (plus sharded data-parallel rows on a multi-device host); returns
+    (rows, ptq_parity, fusion_parity, sharded_parity_or_None)."""
     cfgs = {f: vision_registry.build_cfg(name, fused=f)
             for f in (True, False)}
     cfg = cfgs[True]
@@ -109,6 +121,7 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                 stats["config"] = cfg.name   # concrete geometry
                 stats["batch"] = batch
                 stats["fused"] = fused
+                stats["device_count"] = jax.device_count()
                 stats["fusion_speedup"] = speedup
                 rows.append(stats)
                 tag = "fused" if fused else "unfused"
@@ -151,7 +164,50 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
           f"logit_err={fuse_err:.6f}/{scale:.4f} "
           f"speedup={min(measured):.3f}..{max(measured):.3f} "
           f"modelled={modelled:.3f}")
-    return rows, ptq, fusion
+
+    # -- sharded rows + parity: data-parallel mesh over every device ------
+    sharded = None
+    ndev = jax.device_count()
+    if ndev > 1:
+        batch = max(batches)
+        errs = {}
+        for mode in ("float", "int8"):
+            server = VisionServer(cfgs[True], params, qparams=qparams,
+                                  calibrator=cal, mode=mode,
+                                  buckets=(batch,), data_parallel=ndev)
+            server.submit_many(images)
+            server.run()                     # compile warm-up drain
+            done = sorted(server.done, key=lambda r: r.rid)
+            sl = np.stack([r.logits for r in done[:requests]])
+            errs[mode] = float(
+                np.abs(sl - logits[(mode, batch, True)]).max())
+            stats = _timed_ab_drains({"sharded": server}, images,
+                                     repeats)["sharded"]
+            stats["model"] = name
+            stats["config"] = cfg.name
+            # the bucket actually drained: ``batch`` rounded up to a
+            # multiple of the device count — NOT the nominal sweep batch,
+            # so cross-host joins compare like against like
+            stats["batch"] = server.buckets[0]
+            stats["fused"] = True
+            stats["device_count"] = ndev
+            stats["fusion_speedup"] = None   # no unfused sharded twin
+            rows.append(stats)
+            print(f"vision_serve.{name}.{mode}.b{stats['batch']}"
+                  f".sharded{ndev},"
+                  f"{stats['wall_s'] / max(stats['requests'], 1) * 1e6:.0f},"
+                  f"img_per_s={stats['throughput_img_s']:.1f} "
+                  f"logit_err={errs[mode]:.6f}")
+        sharded = {"model": name, "devices": ndev,
+                   "sharded_float_logit_max_err": errs["float"],
+                   "sharded_int8_logit_max_err": errs["int8"],
+                   "float_logit_scale": scale,
+                   "within_tolerance": bool(
+                       max(errs.values()) <= ptq_tolerance(scale))}
+        print(f"vision_serve.{name}.sharded_parity,0,"
+              f"float_err={errs['float']:.6f} int8_err={errs['int8']:.6f}"
+              f"/{scale:.4f} devices={ndev}")
+    return rows, ptq, fusion, sharded
 
 
 def main(argv=None) -> dict:
@@ -176,24 +232,28 @@ def main(argv=None) -> dict:
     requests = 8 if args.smoke else 16
     batches = (1, 4) if args.smoke else (1, 8)
 
-    runs, ptq_parities, fusion_parities = [], [], []
+    runs, ptq_parities, fusion_parities, sharded_parities = [], [], [], []
     for name in models:
-        rows, ptq, fusion = bench_model(name, requests=requests,
-                                        batches=batches,
-                                        repeats=args.repeats)
+        rows, ptq, fusion, sharded = bench_model(name, requests=requests,
+                                                 batches=batches,
+                                                 repeats=args.repeats)
         runs.extend(rows)
         ptq_parities.append(ptq)
         fusion_parities.append(fusion)
+        if sharded is not None:
+            sharded_parities.append(sharded)
 
     # Deterministic row order regardless of sweep/insertion order, so JSON
     # diffs (tools/compare_bench.py) are stable across runs.
     runs.sort(key=lambda r: (r["model"], r["mode"], r["batch"],
-                             not r["fused"]))
+                             not r["fused"], r.get("devices", 1)))
     record = {"bench": "vision_serve", "smoke": args.smoke,
               "models": models, "requests_per_run": requests,
               "batches": list(batches), "repeats": args.repeats,
+              "device_count": jax.device_count(),
               "ptq_parity": ptq_parities,
               "fusion_parity": fusion_parities,
+              "sharded_parity": sharded_parities,
               "runs": runs}
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -223,6 +283,21 @@ def main(argv=None) -> dict:
             f"[vision-serve-bench] fusion parity gate failed: fused-schedule "
             f"logits drift from the unfused executor beyond the calibration "
             f"tolerance for: {', '.join(bad)}")
+    if jax.device_count() > 1:
+        missing = sorted(set(models) -
+                         {p["model"] for p in sharded_parities})
+        if missing:
+            raise SystemExit(
+                f"[vision-serve-bench] sharded coverage gate failed: "
+                f"{jax.device_count()} devices visible but no sharded rows "
+                f"for: {', '.join(missing)}")
+        bad = [p["model"] for p in sharded_parities
+               if not p["within_tolerance"]]
+        if bad:
+            raise SystemExit(
+                f"[vision-serve-bench] sharded parity gate failed: "
+                f"data-parallel logits drift from the single-device path "
+                f"beyond the calibration tolerance for: {', '.join(bad)}")
     return record
 
 

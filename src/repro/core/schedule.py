@@ -557,3 +557,45 @@ def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
         else:
             raise ValueError(f"unknown phase kind {ph.kind!r}")
     return x
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware executor entry (data-parallel batch grid)
+# ---------------------------------------------------------------------------
+
+
+def place_schedule_inputs(params: Any, patches: jax.Array, mesh):
+    """Place executor inputs under `NamedSharding` for a serving mesh.
+
+    Params (float arrays or int8 `QTensor`s — whose per-channel weight
+    scales ride along as pytree children) replicate across the data axis;
+    the patch batch shards over ``data`` when the batch size divides the
+    axis, falling back to replication otherwise (the `_fits` ladder —
+    never a compile error).  The frozen activation-calibration scales are
+    closure scalars inside the jitted replay and replicate on their own.
+    """
+    from repro.distributed import sharding as shd
+    return (shd.shard_vision_params(params, mesh),
+            shd.shard_vision_batch(patches, mesh))
+
+
+def run_schedule_sharded(sched: Schedule, params: Any, patches: jax.Array,
+                         mesh, observer=None) -> jax.Array:
+    """`run_schedule`, data-parallel over a device mesh.
+
+    Works for fused and unfused schedules in both modes: every phase —
+    including the fused ``layer`` / ``inner_layer`` kernel chains and the
+    window/pixel folds, which only reshape *within* an image's batch row —
+    keeps the batch axis outermost-parallel, so one `PartitionSpec` on the
+    executor inputs shards the whole replay.  int8 requires a *frozen*
+    calibrator (calibration itself is a host-side amax loop and stays
+    single-device).
+
+    Serving keeps its own per-bucket jit cache (`VisionServer`); this
+    entry compiles per call and is meant for tests and one-shot runs.
+    """
+    assert observer is None or observer.frozen is not None, \
+        "sharded execution needs frozen calibration scales (or float mode)"
+    params, patches = place_schedule_inputs(params, patches, mesh)
+    fwd = jax.jit(lambda p, x: run_schedule(sched, p, x, observer=observer))
+    return fwd(params, patches)

@@ -53,11 +53,16 @@ _ROW = ("wo", "w_down", "w_out", "w_msa")
 _COL_BIAS = ("bq", "bk", "bv", "b_up", "b_in", "a_param", "gn_w")
 
 
-def _axis_size(mesh, name: str) -> int:
+def axis_size(mesh, name: str) -> int:
+    """Size of a mesh axis by name (1 if absent); works on `Mesh` and
+    `AbstractMesh` across API generations."""
     sizes = getattr(mesh, "axis_sizes", None)
     if sizes is None:
         sizes = mesh.devices.shape
     return dict(zip(mesh.axis_names, sizes)).get(name, 1)
+
+
+_axis_size = axis_size          # internal call sites / back-compat
 
 
 def _fits(shape: Tuple[int, ...], spec: Sequence, mesh: Mesh) -> P:
@@ -189,6 +194,70 @@ def cache_spec_tree(cfg: ModelConfig, caches_shape: Any, mesh: Mesh,
         return _fits(shape, tuple(spec), mesh)
 
     return jax.tree_util.tree_map_with_path(rule, caches_shape)
+
+
+# ---------------------------------------------------------------------------
+# Vision serving specs (data-parallel batch grid)
+# ---------------------------------------------------------------------------
+#
+# The vision pipeline's unit of work is the `(batch, head)` kernel grid with
+# the batch axis outermost-parallel (core/schedule.py), so the serving shard
+# rule is simply: batch on ``data``, params replicated.  The per-head
+# ``wq/wk/wv`` stacks (H, D, Dh) — the same nested subtree layout across all
+# four families (ViT/DeiT flat ``layers``, Swin ``stages/blocks``, TNT
+# ``inner``/``outer``) — additionally shard their head dim when the mesh
+# carries a ``model`` axis that divides H, through the same `_fits`
+# divisibility fallback as the LM rules.  int8 `QTensor` leaves need no
+# special casing: they are pytree nodes whose (values, scale) children get
+# per-leaf specs, and the frozen activation-calibration scales are scalars,
+# so every quantization scale replicates.
+
+
+_VISION_PER_HEAD = ("wq", "wk", "wv")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def vision_param_specs(params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a vision param tree (float or int8 PTQ).
+
+    Everything replicates over the data-parallel axes; per-head QKV stacks
+    shard head-wise over a ``model`` axis when present and divisible.
+    """
+    has_model = "model" in mesh.axis_names
+
+    def rule(path, leaf):
+        shape = tuple(leaf.shape)
+        names = _path_names(path)
+        if has_model and len(shape) == 3 \
+                and any(n in _VISION_PER_HEAD for n in names):
+            # (H, D, Dh) weight stack — or its (H, 1, Dh) per-head scale
+            return _fits(shape, ("model", None, None), mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def vision_batch_spec(batch_size: int, mesh: Mesh) -> P:
+    """Batch-axis spec for the serving micro-batch: the largest (pod, data)
+    prefix that divides the batch, else replication (never a compile
+    error) — the same fallback ladder as `_batch_axis`."""
+    return P(_batch_axis(batch_size, mesh))
+
+
+def shard_vision_params(params: Any, mesh: Mesh) -> Any:
+    """`device_put` a vision param tree under its NamedSharding tree."""
+    return jax.device_put(params, named(vision_param_specs(params, mesh),
+                                        mesh))
+
+
+def shard_vision_batch(batch: Any, mesh: Mesh) -> Any:
+    """`device_put` a (B, ...) activation batch, sharded over ``data`` when
+    B divides, replicated otherwise."""
+    spec = vision_batch_spec(batch.shape[0], mesh)
+    return jax.device_put(batch, NamedSharding(mesh, spec))
 
 
 def fsdp_widen(param_spec_tree: Any, params_shape: Any, mesh,

@@ -9,7 +9,7 @@ tests and benches must keep seeing 1 device).
 
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax
@@ -52,6 +52,22 @@ def make_debug_mesh(*, multi_pod: bool = False, model: int = 2,
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     need = int(np.prod(shape))
     return make_mesh_compat(shape, axes, devices=jax.devices()[:need])
+
+
+def make_vision_mesh(data: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh for data-parallel vision serving.
+
+    ``data`` defaults to every visible device; vision serving replicates
+    params and shards only the micro-batch, so there is no model axis.
+    """
+    devices = jax.devices()
+    n = len(devices) if data is None else data
+    if n < 1 or n > len(devices):
+        raise RuntimeError(
+            f"vision mesh needs {n} devices, found {len(devices)}; on CPU "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n}")
+    return make_mesh_compat((n,), ("data",), devices=devices[:n])
 
 
 # TPU v5e hardware constants used by the roofline analysis.

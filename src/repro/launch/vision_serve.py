@@ -20,10 +20,18 @@ Modes:
     weights + calibrated activation scales through the fused int8 MSA /
     quantized matmul path.
 
+Multi-device: ``mesh=`` / ``data_parallel=`` shard each drain's batch axis
+across a 1-D ``("data",)`` device mesh (params replicated, micro-batch
+split — `distributed.sharding.vision_param_specs` / `vision_batch_spec`).
+Buckets round up to a multiple of the data-axis size so every padded
+micro-batch lands pre-sharded before the one jitted call.
+
 Usage (CPU examples):
   PYTHONPATH=src python -m repro.launch.serve --vision --list-models
   PYTHONPATH=src python -m repro.launch.serve --vision --model swin_t \
       --requests 32 --buckets 1,2,4,8 --mode both
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --vision --model vit_edge --devices 8
 """
 
 from __future__ import annotations
@@ -32,14 +40,23 @@ import argparse
 import json
 import os
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import Calibrator
+from repro.distributed import sharding as shd
 from repro.models import vision_registry, vit
+
+
+def round_buckets(buckets: Sequence[int], data_parallel: int) -> Tuple[int, ...]:
+    """Round each batch bucket up to a multiple of the data-axis size (and
+    dedupe), so every padded micro-batch divides the mesh and shards
+    without a replication fallback."""
+    dp = max(int(data_parallel), 1)
+    return tuple(sorted({-(-b // dp) * dp for b in buckets}))
 
 
 class VisionRequest:
@@ -69,23 +86,47 @@ class VisionServer:
     requests, rounds up to the smallest bucket that fits, pads with zero
     images, and runs one batched forward — one compiled program per
     (bucket, mode), cached across the server's life.
+
+    ``mesh`` (a 1-D ``("data",)`` `jax.sharding.Mesh`) or ``data_parallel``
+    (device count; builds the mesh via `launch.mesh.make_vision_mesh`)
+    turn on data-parallel drains: params/qparams are placed replicated,
+    buckets round up to a multiple of the data-axis size, and every padded
+    micro-batch is device_put pre-sharded on ``data`` before the one
+    jitted call — GSPMD splits the whole `(batch, head)` grid, fused or
+    unfused, float or int8 (the frozen calibration scales are scalars and
+    replicate as jit constants).
     """
 
     def __init__(self, cfg, params, *,
                  qparams=None, calibrator: Optional[Calibrator] = None,
                  mode: str = "float",
-                 buckets: Sequence[int] = (1, 2, 4, 8)):
+                 buckets: Sequence[int] = (1, 2, 4, 8),
+                 mesh=None, data_parallel: Optional[int] = None):
         assert mode in ("float", "int8")
         if mode == "int8":
             assert qparams is not None, "int8 mode needs quantized params"
             assert calibrator is not None and calibrator.frozen is not None, \
                 "int8 mode needs a frozen activation-scale calibrator"
+        if mesh is None and data_parallel is not None and data_parallel > 1:
+            from repro.launch.mesh import make_vision_mesh
+            mesh = make_vision_mesh(data_parallel)
+        self.mesh = mesh
+        self.dp = int(np.prod([shd.axis_size(mesh, a)
+                               for a in shd.dp_axes(mesh)])) if mesh else 1
+        if mesh is not None:
+            # Replicate only the tree this mode's forward closes over —
+            # placing the unused one would cost device memory and startup
+            # transfer proportional to mesh size for nothing.
+            if mode == "int8":
+                qparams = shd.shard_vision_params(qparams, mesh)
+            else:
+                params = shd.shard_vision_params(params, mesh)
         self.cfg = cfg
         self.params = params
         self.qparams = qparams
         self.calibrator = calibrator
         self.mode = mode
-        self.buckets = tuple(sorted(buckets))
+        self.buckets = round_buckets(buckets, self.dp)
         assert self.buckets and self.buckets[0] > 0, \
             f"batch buckets must be positive, got {buckets}"
         self.queue: List[VisionRequest] = []
@@ -144,8 +185,16 @@ class VisionServer:
                            images.dtype)
             images = np.concatenate([images, pad])
             self.n_padded += bucket - take
+        if self.mesh is not None:
+            # Buckets are rounded to a multiple of the data-axis size, so
+            # the padded micro-batch lands pre-sharded (batch on ``data``)
+            # before the single jitted call — each device receives only
+            # its own shard straight from the host array.
+            batch_in = shd.shard_vision_batch(images, self.mesh)
+        else:
+            batch_in = jnp.asarray(images)
         logits = np.asarray(jax.block_until_ready(
-            self._forward(jnp.asarray(images))))
+            self._forward(batch_in)))
         t = time.perf_counter()
         for i, req in enumerate(batch):
             req.t_done = t
@@ -164,17 +213,24 @@ class VisionServer:
 
     def run(self) -> Dict[str, float]:
         """Drain the whole queue and return this run's serving statistics."""
-        batches0, padded0 = self.n_batches, self.n_padded
+        batches0, padded0, done0 = self.n_batches, self.n_padded, \
+            len(self.done)
         t0 = time.perf_counter()
         served = 0
         while self.queue:
             served += self.step()
         dt = time.perf_counter() - t0
-        lat_ms = np.array([r.latency_s for r in self.done[-served:]]) * 1e3 \
+        # Slice this run's requests from the pre-run high-water mark: the
+        # window is correct by construction for every served count (a
+        # ``done[-served:]`` slice is only safe behind a served > 0 guard
+        # — at 0 it silently means the whole list).  Schema is identical
+        # whether or not anything was served (zeros when idle).
+        lat_ms = np.array([r.latency_s for r in self.done[done0:]]) * 1e3 \
             if served else np.zeros((0,))
         return {
             "mode": self.mode,
             "requests": served,
+            "devices": self.dp,
             "batches": self.n_batches - batches0,
             "padded": self.n_padded - padded0,
             "wall_s": dt,
@@ -222,12 +278,15 @@ def build_edge_vit(image: int = 32, patch: int = 8, dim: int = 96,
 
 def serve_model(cfg, *, requests: int, buckets: Sequence[int],
                 modes: Sequence[str], seed: int = 0, calib_images: int = 8,
-                name: Optional[str] = None) -> List[Dict[str, float]]:
+                name: Optional[str] = None,
+                devices: int = 1) -> List[Dict[str, float]]:
     """Init params, (optionally) quantize+calibrate, and drain ``requests``
     random images through a `VisionServer` per mode.  Returns one stats row
     per mode, tagged ``model`` = registry ``name`` (falling back to the
     config name — the same join key the bench JSON uses) and ``config`` =
-    the concrete geometry's name."""
+    the concrete geometry's name.  ``devices`` > 1 shards each drain's
+    batch axis across that many devices (calibration stays single-device;
+    only the frozen scales reach the sharded path)."""
     params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     images = rng.standard_normal(
@@ -241,13 +300,15 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
     all_stats = []
     for mode in modes:
         server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                              mode=mode, buckets=buckets)
+                              mode=mode, buckets=buckets,
+                              data_parallel=devices)
         server.submit_many(images)
         stats = server.run()
         stats["model"] = name or cfg.name
         stats["config"] = cfg.name
         all_stats.append(stats)
         print(f"[vision-serve] {cfg.name} mode={mode} "
+              f"devices={stats['devices']} "
               f"{stats['requests']} reqs in {stats['wall_s']:.2f}s -> "
               f"{stats['throughput_img_s']:.1f} img/s, "
               f"p50 {stats['latency_p50_ms']:.1f}ms "
@@ -278,6 +339,10 @@ def main(argv=None):
     ap.add_argument("--no-fuse", action="store_true",
                     help="keep the per-phase schedule (disable the fused "
                          "msa+mlp layer kernels) — for A/B comparison")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel device count: shard each drain's "
+                         "batch axis across this many devices (params "
+                         "replicated; buckets round up to a multiple)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None,
                     help="write stats as a BENCH_*.json-style record")
@@ -290,18 +355,26 @@ def main(argv=None):
         return []
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.devices > jax.device_count():
+        raise SystemExit(
+            f"[vision-serve] --devices {args.devices} but only "
+            f"{jax.device_count()} visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={args.devices}")
     cfg = vision_registry.build_cfg(args.model, full=args.full,
                                     backend=args.backend,
                                     fused=not args.no_fuse)
     modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
-                            modes=modes, seed=args.seed, name=args.model)
+                            modes=modes, seed=args.seed, name=args.model,
+                            devices=args.devices)
 
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
             json.dump({"bench": "vision_serve", "model": args.model,
                        "config": cfg.name, "buckets": list(buckets),
+                       "devices": args.devices,
+                       "device_count": jax.device_count(),
                        "runs": all_stats}, f, indent=2)
         print(f"[vision-serve] wrote {args.json_out}")
     return all_stats

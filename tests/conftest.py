@@ -1,5 +1,8 @@
 """Pytest config: mark registration. NOTE: do not set
-xla_force_host_platform_device_count here — tests must see 1 device."""
+xla_force_host_platform_device_count here — the device count is the CI
+matrix's axis (8-way mesh leg / single-device leg), so the suite must
+pass at whatever count the environment provides; multi-device tests
+self-skip below their required count (tests/test_vision_sharding.py)."""
 
 
 def pytest_configure(config):

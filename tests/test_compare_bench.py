@@ -1,0 +1,77 @@
+"""tools/compare_bench.py exit-code contract: regressions beyond
+``--max-regression`` exit 3 (CI warns, non-blocking), tool crashes exit 2
+(CI fails — no more ``|| true`` swallowing both), clean compares exit 0;
+rows join on (model, mode, batch, fused, devices)."""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOOL = os.path.join(REPO, "tools", "compare_bench.py")
+
+
+def _row(model="vit_edge", mode="float", batch=4, fused=True, devices=1,
+         thr=100.0, p50=5.0):
+    return {"model": model, "mode": mode, "batch": batch, "fused": fused,
+            "devices": devices, "throughput_img_s": thr,
+            "latency_p50_ms": p50, "latency_p99_ms": p50 * 2,
+            "fusion_speedup": 1.2}
+
+
+def _write(tmp_path, name, rows):
+    path = tmp_path / name
+    path.write_text(json.dumps({"bench": "vision_serve", "runs": rows}))
+    return str(path)
+
+
+def _run(*argv):
+    proc = subprocess.run([sys.executable, TOOL, *argv],
+                          capture_output=True, text=True, timeout=120)
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def test_clean_compare_exits_zero(tmp_path):
+    base = _write(tmp_path, "base.json", [_row()])
+    cand = _write(tmp_path, "cand.json", [_row(thr=101.0)])
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 0, out
+    assert "1 joined rows" in out
+
+
+def test_regression_beyond_threshold_exits_three(tmp_path):
+    base = _write(tmp_path, "base.json", [_row(thr=100.0)])
+    cand = _write(tmp_path, "cand.json", [_row(thr=50.0)])
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 3, out
+    assert "REGRESSION" in out
+    # without the gate flag the same diff is report-only
+    rc, out = _run(base, cand)
+    assert rc == 0, out
+
+
+def test_missing_file_and_bad_json_exit_two(tmp_path):
+    good = _write(tmp_path, "good.json", [_row()])
+    rc, out = _run(good, str(tmp_path / "nope.json"),
+                   "--max-regression", "25")
+    assert rc == 2, out
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    rc, out = _run(good, str(bad), "--max-regression", "25")
+    assert rc == 2, out
+
+
+def test_rows_join_on_devices(tmp_path):
+    """A devices=8 sharded row must not be compared against the devices=1
+    row of the same (model, mode, batch, fused) cell; pre-sharding files
+    (no devices field) join as devices=1."""
+    legacy = dict(_row(thr=100.0))
+    del legacy["devices"]
+    base = _write(tmp_path, "base.json", [legacy])
+    cand = _write(tmp_path, "cand.json",
+                  [_row(thr=10.0, devices=8), _row(thr=100.0, devices=1)])
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 0, out              # the 10 img/s row joined nothing
+    assert "1 joined rows" in out
+    assert "only in candidate" in out

@@ -1,19 +1,26 @@
 #!/usr/bin/env python3
 """Diff two BENCH_vision_serve.json files (baseline vs candidate).
 
-Joins bench rows on (model, mode, batch, fused) and prints per-row
-throughput / p50 / p99 deltas plus a per-model summary (including the
-recorded fusion_speedup movement), flagging rows that appear in only one
-file.  Intended uses:
+Joins bench rows on (model, mode, batch, fused, devices) and prints
+per-row throughput / p50 / p99 deltas plus a per-model summary (including
+the recorded fusion_speedup movement), flagging rows that appear in only
+one file.  Intended uses:
 
-  * CI: non-blocking report of the PR's bench against the committed
-    baseline (`.github/workflows/ci.yml` snapshots the checked-in JSON
-    before the bench overwrites it);
+  * CI: report of the PR's bench against the committed baseline
+    (`.github/workflows/ci.yml` snapshots the checked-in JSON before the
+    bench overwrites it);
   * local A/B across commits: run the bench on two checkouts and diff the
     artifacts (see README "reading the bench JSON").
 
-Exit code is 0 unless ``--strict PCT`` is given AND some joined row's
-throughput regressed by more than PCT percent (for opt-in gating).
+Exit codes (CI keys off these — crashes must FAIL the step, regressions
+may stay report-only):
+
+  0 — compared cleanly, no gated regression;
+  2 — the tool itself failed (missing file, bad JSON, wrong schema);
+  3 — some joined row's throughput regressed beyond ``--max-regression``
+      (distinct from 2 so CI can keep regressions non-blocking without
+      swallowing crashes the way ``... || true`` did);
+  1 — legacy ``--strict`` gate tripped (hard-fail variant).
 
 Run:  python tools/compare_bench.py BASELINE.json CANDIDATE.json
 """
@@ -25,7 +32,10 @@ import json
 import sys
 from typing import Dict, Tuple
 
-Key = Tuple[str, str, int, bool]
+Key = Tuple[str, str, int, bool, int]
+
+REGRESSION_EXIT = 3
+CRASH_EXIT = 2
 
 
 def load_rows(path: str) -> Dict[Key, dict]:
@@ -34,9 +44,10 @@ def load_rows(path: str) -> Dict[Key, dict]:
     rows = {}
     for r in record.get("runs", []):
         # pre-fusion files have no "fused" field: those rows ARE the
-        # per-phase executor, so join them as fused=False
+        # per-phase executor, so join them as fused=False; pre-sharding
+        # files have no "devices" field: single-device rows, devices=1
         key = (r["model"], r["mode"], int(r.get("batch", 0)),
-               bool(r.get("fused", False)))
+               bool(r.get("fused", False)), int(r.get("devices", 1)))
         rows[key] = r
     return rows
 
@@ -45,15 +56,7 @@ def _pct(new: float, old: float) -> float:
     return (new / old - 1.0) * 100.0 if old else float("inf")
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(prog="compare_bench")
-    ap.add_argument("baseline", help="baseline BENCH_vision_serve.json")
-    ap.add_argument("candidate", help="candidate BENCH_vision_serve.json")
-    ap.add_argument("--strict", type=float, default=None, metavar="PCT",
-                    help="exit non-zero if any row's throughput regresses "
-                         "more than PCT%% (default: report only)")
-    args = ap.parse_args(argv)
-
+def compare(args) -> int:
     base = load_rows(args.baseline)
     cand = load_rows(args.candidate)
     joined = sorted(set(base) & set(cand))
@@ -61,7 +64,7 @@ def main(argv=None) -> int:
     only_cand = sorted(set(cand) - set(base))
 
     hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
-           f"{'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
+           f"{'dev':>3} {'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
            f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7}")
     print(f"[compare-bench] {args.baseline} -> {args.candidate}: "
           f"{len(joined)} joined rows")
@@ -73,9 +76,9 @@ def main(argv=None) -> int:
         dthr = _pct(c["throughput_img_s"], b["throughput_img_s"])
         dp50 = _pct(c["latency_p50_ms"], b["latency_p50_ms"])
         worst = min(worst, dthr)
-        model, mode, batch, fused = key
+        model, mode, batch, fused, devices = key
         print(f"{model:<10} {mode:<6} {batch:>5} "
-              f"{'fused' if fused else 'unfused':<7} "
+              f"{'fused' if fused else 'unfused':<7} {devices:>3} "
               f"{b['throughput_img_s']:>10.1f} "
               f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "
               f"{b['latency_p50_ms']:>8.2f} {c['latency_p50_ms']:>8.2f} "
@@ -101,7 +104,37 @@ def main(argv=None) -> int:
         print(f"[compare-bench] FAIL: worst throughput delta {worst:+.1f}% "
               f"exceeds --strict {args.strict}%")
         return 1
+    if args.max_regression is not None \
+            and worst < -abs(args.max_regression):
+        print(f"[compare-bench] REGRESSION: worst throughput delta "
+              f"{worst:+.1f}% exceeds --max-regression "
+              f"{args.max_regression}% (exit {REGRESSION_EXIT})")
+        return REGRESSION_EXIT
     return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="compare_bench")
+    ap.add_argument("baseline", help="baseline BENCH_vision_serve.json")
+    ap.add_argument("candidate", help="candidate BENCH_vision_serve.json")
+    ap.add_argument("--strict", type=float, default=None, metavar="PCT",
+                    help="exit 1 if any row's throughput regresses more "
+                         "than PCT%% (hard gate)")
+    ap.add_argument("--max-regression", type=float, default=None,
+                    metavar="PCT",
+                    help=f"exit {REGRESSION_EXIT} if any row's throughput "
+                         "regresses more than PCT%% — a distinct code so "
+                         "CI can treat regressions as warnings while tool "
+                         "crashes (bad JSON, missing file: exit "
+                         f"{CRASH_EXIT}) still fail the step")
+    args = ap.parse_args(argv)
+    try:
+        return compare(args)
+    except (OSError, json.JSONDecodeError, KeyError, TypeError,
+            ValueError) as e:
+        print(f"[compare-bench] ERROR: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return CRASH_EXIT
 
 
 if __name__ == "__main__":
