@@ -7,12 +7,17 @@ modes, with the schedule executed BOTH fused (the default `layer`-phase
 kernels of `kernels/vita_layer.py`) and unfused (per-phase, `--no-fuse`
 semantics) — the A/B that prices the msa→mlp phase-boundary fusion.
 
-Each row carries a ``fusion_speedup`` field (fused ÷ unfused throughput at
-the same model/mode/batch); the per-model summary additionally records the
-analytic `core.perfmodel.fusion_speedup_model` prediction, so the JSON is
-the measured-vs-modelled comparison in one artifact.  Rows are sorted by
-(model, mode, batch, fused) so `tools/compare_bench.py` diffs are stable
-across runs.
+Each FUSED row carries a ``fusion_speedup`` field (fused ÷ unfused
+throughput at the same model/mode/batch — recorded once, on the fused row
+of the pair) plus ``policy_fused``: the variant the active
+``--fusion-policy`` (always / never / auto) would actually serve for that
+cell, with ``auto`` deciding from this run's own measured A/B — so under
+``auto`` no configuration ships a variant its own measurement says is
+slower.  The per-model summary additionally records the analytic
+`core.perfmodel.fusion_speedup_model` prediction and the per-cell policy
+decisions, so the JSON is the measured-vs-modelled comparison in one
+artifact.  Rows are sorted by (model, mode, batch, fused) so
+`tools/compare_bench.py` diffs are stable across runs.
 
 On a multi-device host (CI fakes 8 CPU devices via ``XLA_FLAGS``) each
 model additionally emits SHARDED rows: the fused schedule drained through
@@ -77,10 +82,13 @@ def _timed_ab_drains(servers: dict, images: np.ndarray,
 
 
 def bench_model(name: str, *, requests: int, batches, repeats: int,
-                seed: int = 0):
+                seed: int = 0, policy_mode: str = "always"):
     """One model through {float,int8} x batch buckets x {fused,unfused}
     (plus sharded data-parallel rows on a multi-device host); returns
-    (rows, ptq_parity, fusion_parity, sharded_parity_or_None)."""
+    (rows, ptq_parity, fusion_parity, sharded_parity_or_None).
+    ``policy_mode`` tags each fused row with the serving decision the
+    `core.schedule.FusionPolicy` would make for that cell (``auto``
+    decides from the speedup measured in THIS run)."""
     cfgs = {f: vision_registry.build_cfg(name, fused=f)
             for f in (True, False)}
     cfg = cfgs[True]
@@ -96,6 +104,7 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
 
     rows = []
     logits = {}
+    decisions = []
     for mode in ("float", "int8"):
         for batch in batches:
             servers = {}
@@ -115,6 +124,15 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
             thr_u = best[False]["throughput_img_s"]
             speedup = (best[True]["throughput_img_s"] / thr_u
                        if thr_u > 0 else 0.0)
+            # the serving decision the active policy makes for this cell
+            # (auto decides from THIS run's measured A/B, so the chosen
+            # variant is the best measured one by construction)
+            policy_fused = (speedup >= 1.0 if policy_mode == "auto"
+                            else policy_mode == "always")
+            decisions.append({"mode": mode, "batch": batch,
+                              "measured_speedup": speedup,
+                              "policy_fused": policy_fused,
+                              "best_fused": speedup >= 1.0})
             for fused in (True, False):
                 stats = best[fused]
                 stats["model"] = name        # registry name (the join key)
@@ -122,7 +140,12 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                 stats["batch"] = batch
                 stats["fused"] = fused
                 stats["device_count"] = jax.device_count()
-                stats["fusion_speedup"] = speedup
+                if fused:
+                    # recorded ONCE, on the fused row of the A/B pair
+                    # (the pre-observability schema duplicated it onto
+                    # both rows — a wart compare_bench had to tolerate)
+                    stats["fusion_speedup"] = speedup
+                    stats["policy_fused"] = policy_fused
                 rows.append(stats)
                 tag = "fused" if fused else "unfused"
                 us = stats["wall_s"] / max(stats["requests"], 1) * 1e6
@@ -130,7 +153,8 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                       f"img_per_s={stats['throughput_img_s']:.1f} "
                       f"p50_ms={stats['latency_p50_ms']:.1f} "
                       f"p99_ms={stats['latency_p99_ms']:.1f} "
-                      f"fusion_speedup={speedup:.3f}")
+                      f"fusion_speedup={speedup:.3f} "
+                      f"policy_fused={policy_fused}")
 
     scale = max(float(np.abs(logits[("float", b, False)]).max())
                 for b in batches)
@@ -159,11 +183,13 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
               "within_tolerance": bool(fuse_err <= ptq_tolerance(scale)),
               "measured_speedup_min": min(measured),
               "measured_speedup_max": max(measured),
-              "modelled_speedup": modelled}
+              "modelled_speedup": modelled,
+              "fusion_policy": policy_mode,
+              "decisions": decisions}
     print(f"vision_serve.{name}.fusion_parity,0,"
           f"logit_err={fuse_err:.6f}/{scale:.4f} "
           f"speedup={min(measured):.3f}..{max(measured):.3f} "
-          f"modelled={modelled:.3f}")
+          f"modelled={modelled:.3f} policy={policy_mode}")
 
     # -- sharded rows + parity: data-parallel mesh over every device ------
     sharded = None
@@ -191,7 +217,7 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
             stats["batch"] = server.buckets[0]
             stats["fused"] = True
             stats["device_count"] = ndev
-            stats["fusion_speedup"] = None   # no unfused sharded twin
+            # no fusion_speedup field: there is no unfused sharded twin
             rows.append(stats)
             print(f"vision_serve.{name}.{mode}.b{stats['batch']}"
                   f".sharded{ndev},"
@@ -219,6 +245,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--repeats", type=int, default=5,
                     help="timed fused/unfused drain pairs per row, "
                          "interleaved (each side's best throughput kept)")
+    ap.add_argument("--fusion-policy", choices=("always", "never", "auto"),
+                    default="always",
+                    help="serving decision recorded per cell "
+                         "(policy_fused on fused rows): 'auto' picks the "
+                         "variant this run measured as faster — the bench "
+                         "always measures BOTH variants regardless")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
 
@@ -234,9 +266,9 @@ def main(argv=None) -> dict:
 
     runs, ptq_parities, fusion_parities, sharded_parities = [], [], [], []
     for name in models:
-        rows, ptq, fusion, sharded = bench_model(name, requests=requests,
-                                                 batches=batches,
-                                                 repeats=args.repeats)
+        rows, ptq, fusion, sharded = bench_model(
+            name, requests=requests, batches=batches, repeats=args.repeats,
+            policy_mode=args.fusion_policy)
         runs.extend(rows)
         ptq_parities.append(ptq)
         fusion_parities.append(fusion)
@@ -250,6 +282,7 @@ def main(argv=None) -> dict:
     record = {"bench": "vision_serve", "smoke": args.smoke,
               "models": models, "requests_per_run": requests,
               "batches": list(batches), "repeats": args.repeats,
+              "fusion_policy": args.fusion_policy,
               "device_count": jax.device_count(),
               "ptq_parity": ptq_parities,
               "fusion_parity": fusion_parities,

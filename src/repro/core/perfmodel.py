@@ -543,6 +543,63 @@ def expected_phase_cycles(m: VisionModelSpec,
     return out
 
 
+def expected_phase_macs(m: VisionModelSpec,
+                        hw: Optional[VitaHW] = None, *,
+                        fused: bool = False) -> Dict[str, float]:
+    """Useful MACs per `core.schedule` phase KIND for one image.
+
+    The MAC twin of `expected_phase_cycles` (same keys): where that table
+    attributes *time*, this one attributes *work*, so the two divide into
+    a per-phase-kind HUE — useful MACs / (total MAC capacity x cycles) —
+    the quantity the paper's Table IV reports per model and the live
+    profiler (`core.hue`) reports per phase.  Fusion moves MACs between
+    keys (msa+mlp -> layer) but never changes the total: boundary
+    round-trips and the aux LN/residual/requant passes are pure overhead.
+    """
+    hw = hw or VitaHW()
+    out: Dict[str, float] = {}
+
+    def add(kind: str, macs: float) -> None:
+        out[kind] = out.get(kind, 0.0) + float(macs)
+
+    def add_pair(kind_msa: str, kind_mlp: str, kind_layer: str,
+                 msa_m: float, mlp_m: float, layers: int) -> None:
+        if fused:
+            add(kind_layer, (msa_m + mlp_m) * layers)
+        else:
+            add(kind_msa, msa_m * layers)
+            add(kind_mlp, mlp_m * layers)
+
+    add("embed", patch_embed_phase(hw, m).useful_macs)
+    for s in m.stages:
+        if s.inner_tokens:
+            inn = inner_stage(s)
+            add_pair("inner_msa", "inner_mlp", "inner_layer",
+                     sum(p.useful_macs for p in msa_phase(hw, inn)),
+                     mlp_phase(hw, inn).useful_macs, s.layers)
+            add("fold", fold_phase(hw, s).useful_macs * s.layers)
+        add_pair("msa", "mlp", "layer",
+                 sum(p.useful_macs for p in msa_phase(hw, s)),
+                 mlp_phase(hw, s).useful_macs, s.layers)
+        if s.patch_merging:
+            add("merge", patch_merging_phase(hw, s).useful_macs)
+    return out
+
+
+def total_boundary_cycles(m: VisionModelSpec,
+                          hw: Optional[VitaHW] = None) -> float:
+    """All msa->mlp (and inner) phase-boundary round-trip cycles of one
+    image — the cycles `fuse_schedule` reclaims (equivalently: the exact
+    difference between the unfused and fused `expected_phase_cycles`
+    totals)."""
+    hw = hw or VitaHW()
+    return sum(
+        s.layers * (phase_boundary_cycles(hw, s)
+                    + (phase_boundary_cycles(hw, s, inner=True)
+                       if s.inner_tokens else 0.0))
+        for s in m.stages)
+
+
 def fusion_speedup_model(m: VisionModelSpec,
                          hw: Optional[VitaHW] = None) -> Dict[str, float]:
     """Modelled end-to-end speedup of the fused schedule over the per-phase

@@ -62,7 +62,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Optional, Tuple
+import time
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -488,6 +489,74 @@ def _merge_phase(ph: Phase, sp: Any, x: jax.Array, obs) -> jax.Array:
     return xs.reshape(b, (gh // 2) * (gw // 2), xs.shape[-1])
 
 
+def _apply_phase(sched: Schedule, ph: Phase, params: Any,
+                 x: Optional[jax.Array], inner: Optional[jax.Array],
+                 obs, quantized: bool
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Execute ONE phase of the control program.
+
+    The executor state is the (outer stream, inner stream) pair; every
+    phase maps it to the next pair.  Shared by the whole-schedule replay
+    (`run_schedule`) and the per-phase profiler (`profile_schedule`),
+    which blocks and times each application separately.
+    """
+
+    def _float(v):
+        return v.dequantize() if isinstance(v, QTensor) else v
+
+    if ph.kind == "embed":
+        if ph.inner_tokens:
+            # TNT dual-stream frontend: sub-patches embed into the
+            # inner stream; its flattened projection seeds the outer.
+            b, t, _ = x.shape
+            sub = pixel_partition(x, ph.inner_tokens)
+            y = _matmul(sub, params["pixel_embed"], obs, "pixel_embed")
+            inner = y + _float(params["inner_pos_embed"])[None]
+            flat = ops.layer_norm(inner.reshape(b, t, -1),
+                                  params["pe_ln_w"], params["pe_ln_b"])
+            x = _matmul(flat, params["patch_embed"], obs, ph.site)
+        else:
+            x = _matmul(x, params["patch_embed"], obs, ph.site)
+            if ph.norm:
+                x = ops.layer_norm(x, params["pe_ln_w"],
+                                   params["pe_ln_b"])
+        if ph.pos_embed:
+            x = x + _float(params["pos_embed"])[None]
+    elif ph.kind == "msa":
+        x = _msa_phase(ph, _subtree(params, ph.path), x, obs,
+                       quantized, sched.backend)
+    elif ph.kind == "mlp":
+        x = _mlp_phase(ph, _subtree(params, ph.path), x, obs,
+                       quantized, sched.backend)
+    elif ph.kind == "layer":
+        x = _layer_phase(ph, _subtree(params, ph.path), x, obs,
+                         quantized, sched.backend)
+    elif ph.kind == "inner_layer":
+        # Fused inner block: the pixel stream through the same fused
+        # kernel chain (batch axis = images x patches).
+        inner = _layer_phase(ph, _subtree(params, ph.path), inner, obs,
+                             quantized, sched.backend)
+    elif ph.kind == "inner_msa":
+        # The pixel stream's batch axis already carries images x
+        # patches, so the SAME phase executors (and the same
+        # `(batch, head)` grid kernels) run the inner blocks.
+        inner = _msa_phase(ph, _subtree(params, ph.path), inner, obs,
+                           quantized, sched.backend)
+    elif ph.kind == "inner_mlp":
+        inner = _mlp_phase(ph, _subtree(params, ph.path), inner, obs,
+                           quantized, sched.backend)
+    elif ph.kind == "fold":
+        x = _fold_phase(ph, _subtree(params, ph.path), x, inner, obs)
+    elif ph.kind == "merge":
+        x = _merge_phase(ph, _subtree(params, ph.path), x, obs)
+    elif ph.kind == "head":
+        x = ops.layer_norm(x, params["ln_f_w"], params["ln_f_b"])
+        x = _matmul(jnp.mean(x, axis=1), params["head"], obs, ph.site)
+    else:
+        raise ValueError(f"unknown phase kind {ph.kind!r}")
+    return x, inner
+
+
 def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
                  observer=None) -> jax.Array:
     """Replay a compiled schedule: patches (B, N, P*P*3) -> logits.
@@ -501,62 +570,138 @@ def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
     quantized = isinstance(params["patch_embed"], QTensor)
     x = patches
     inner: Optional[jax.Array] = None      # TNT pixel stream (B*N, m, c)
-
-    def _float(v):
-        return v.dequantize() if isinstance(v, QTensor) else v
-
     for ph in sched.phases:
-        if ph.kind == "embed":
-            if ph.inner_tokens:
-                # TNT dual-stream frontend: sub-patches embed into the
-                # inner stream; its flattened projection seeds the outer.
-                b, t, _ = x.shape
-                sub = pixel_partition(x, ph.inner_tokens)
-                y = _matmul(sub, params["pixel_embed"], obs, "pixel_embed")
-                inner = y + _float(params["inner_pos_embed"])[None]
-                flat = ops.layer_norm(inner.reshape(b, t, -1),
-                                      params["pe_ln_w"], params["pe_ln_b"])
-                x = _matmul(flat, params["patch_embed"], obs, ph.site)
-            else:
-                x = _matmul(x, params["patch_embed"], obs, ph.site)
-                if ph.norm:
-                    x = ops.layer_norm(x, params["pe_ln_w"],
-                                       params["pe_ln_b"])
-            if ph.pos_embed:
-                x = x + _float(params["pos_embed"])[None]
-        elif ph.kind == "msa":
-            x = _msa_phase(ph, _subtree(params, ph.path), x, obs,
-                           quantized, sched.backend)
-        elif ph.kind == "mlp":
-            x = _mlp_phase(ph, _subtree(params, ph.path), x, obs,
-                           quantized, sched.backend)
-        elif ph.kind == "layer":
-            x = _layer_phase(ph, _subtree(params, ph.path), x, obs,
-                             quantized, sched.backend)
-        elif ph.kind == "inner_layer":
-            # Fused inner block: the pixel stream through the same fused
-            # kernel chain (batch axis = images x patches).
-            inner = _layer_phase(ph, _subtree(params, ph.path), inner, obs,
-                                 quantized, sched.backend)
-        elif ph.kind == "inner_msa":
-            # The pixel stream's batch axis already carries images x
-            # patches, so the SAME phase executors (and the same
-            # `(batch, head)` grid kernels) run the inner blocks.
-            inner = _msa_phase(ph, _subtree(params, ph.path), inner, obs,
-                               quantized, sched.backend)
-        elif ph.kind == "inner_mlp":
-            inner = _mlp_phase(ph, _subtree(params, ph.path), inner, obs,
-                               quantized, sched.backend)
-        elif ph.kind == "fold":
-            x = _fold_phase(ph, _subtree(params, ph.path), x, inner, obs)
-        elif ph.kind == "merge":
-            x = _merge_phase(ph, _subtree(params, ph.path), x, obs)
-        elif ph.kind == "head":
-            x = ops.layer_norm(x, params["ln_f_w"], params["ln_f_b"])
-            x = _matmul(jnp.mean(x, axis=1), params["head"], obs, ph.site)
-        else:
-            raise ValueError(f"unknown phase kind {ph.kind!r}")
+        x, inner = _apply_phase(sched, ph, params, x, inner, obs, quantized)
     return x
+
+
+def profile_schedule(sched: Schedule, params: Any, patches: jax.Array,
+                     observer=None, *, warmup: int = 1, repeats: int = 3
+                     ) -> Tuple[jax.Array, list]:
+    """Replay a schedule with per-phase timing: logits + one record per
+    phase.
+
+    Each phase is compiled as its OWN jitted program (the per-phase
+    analogue of the unfused executor's kernel-launch boundaries) and
+    timed with a block-until-ready barrier after every application —
+    ``warmup`` full replays absorb compilation, then ``repeats`` timed
+    replays run and each phase keeps its best (minimum) time, the
+    standard noise-robust steady-state estimate.  Records are
+    ``{"index", "kind", "site", "ms"}`` dicts in schedule order — feed
+    them to `core.hue.live_hue_report` to join with the analytic
+    `perfmodel.expected_phase_cycles` attribution.
+
+    int8 profiling requires a *frozen* calibrator (calibration is a
+    host-side amax loop that cannot run under jit); float params take
+    ``observer=None`` as usual.
+    """
+    obs = observer
+    assert obs is None or obs.frozen is not None, \
+        "profiling needs frozen calibration scales (or float mode)"
+    quantized = isinstance(params["patch_embed"], QTensor)
+
+    def _phase_fn(ph: Phase):
+        def fn(p, x, inner):
+            return _apply_phase(sched, ph, p, x, inner, obs, quantized)
+        return jax.jit(fn)
+
+    fns = [_phase_fn(ph) for ph in sched.phases]
+    best = [float("inf")] * len(sched.phases)
+    for it in range(max(warmup, 0) + max(repeats, 1)):
+        timed = it >= warmup
+        x, inner = patches, None
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            x, inner = fn(params, x, inner)
+            jax.block_until_ready(x)
+            if inner is not None:
+                jax.block_until_ready(inner)
+            if timed:
+                best[i] = min(best[i], time.perf_counter() - t0)
+    records = [{"index": i, "kind": ph.kind, "site": ph.site,
+                "ms": best[i] * 1e3}
+               for i, ph in enumerate(sched.phases)]
+    return x, records
+
+
+# ---------------------------------------------------------------------------
+# Fusion policy (cost-model- and measurement-driven fuse/don't-fuse)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FusionPolicy:
+    """Decides, per served (model, mode, batch), whether the fused
+    ``layer``-phase schedule or the per-phase one runs.
+
+    The analytic model (`perfmodel.fusion_speedup_model`) predicts fusion
+    always wins on the ViTA datapath (1.23-1.40x), but the bench measures
+    the CPU-interpreter backend *losing* on several configurations — a
+    gap nothing used to act on.  Modes:
+
+      * ``always`` — the pre-policy default: serve the fused schedule;
+      * ``never``  — the ``--no-fuse`` A/B twin: per-phase execution;
+      * ``auto``   — consult measured A/B data (``measurements`` maps
+        ``(model, mode, batch) -> fusion_speedup``, seeded from a
+        ``BENCH_vision_serve.json`` via `from_bench`): fuse iff the
+        measured speedup is >= ``threshold``.  An exact-batch miss falls
+        back to the nearest measured batch of the same (model, mode); a
+        total miss falls back to ``default_fused`` (the model's
+        prediction — fuse).
+    """
+
+    mode: str = "always"
+    measurements: Dict[Tuple[str, str, int], float] = \
+        dataclasses.field(default_factory=dict)
+    threshold: float = 1.0
+    default_fused: bool = True
+
+    MODES = ("always", "never", "auto")
+
+    def __post_init__(self):
+        assert self.mode in self.MODES, \
+            f"fusion policy mode must be one of {self.MODES}, " \
+            f"got {self.mode!r}"
+
+    @classmethod
+    def from_bench(cls, record: Any, mode: str = "auto",
+                   **kw) -> "FusionPolicy":
+        """Seed ``auto`` measurements from a bench record (a loaded
+        ``BENCH_vision_serve.json`` dict, or a path to one).  Reads the
+        measured ``fusion_speedup`` off fused rows (current schema) and
+        tolerates the pre-observability files that duplicated it onto
+        both rows of the A/B pair; sharded rows (no unfused twin,
+        ``fusion_speedup`` null) are skipped."""
+        if isinstance(record, (str, bytes)):
+            import json
+            with open(record) as f:
+                record = json.load(f)
+        meas: Dict[Tuple[str, str, int], float] = {}
+        for r in record.get("runs", []):
+            fs = r.get("fusion_speedup")
+            if r.get("fused") and isinstance(fs, (int, float)):
+                meas[(r["model"], r["mode"], int(r["batch"]))] = float(fs)
+        return cls(mode=mode, measurements=meas, **kw)
+
+    def decide(self, model: str, mode: str, batch: int) -> bool:
+        """Fused or not for one served configuration."""
+        if self.mode == "always":
+            return True
+        if self.mode == "never":
+            return False
+        key = (model, mode, int(batch))
+        if key in self.measurements:
+            return self.measurements[key] >= self.threshold
+        near = [(abs(b - batch), b) for (m, md, b) in self.measurements
+                if m == model and md == mode]
+        if near:
+            b = min(near)[1]
+            return self.measurements[(model, mode, b)] >= self.threshold
+        return self.default_fused
+
+    def decisions(self, model: str, mode: str,
+                  batches: Sequence[int]) -> Dict[int, bool]:
+        return {int(b): self.decide(model, mode, b) for b in batches}
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,9 @@ Usage (CPU examples):
       --requests 16 --batch 4 --max-new 32
   PYTHONPATH=src python -m repro.launch.serve --vision --model swin_t \
       --requests 32 --buckets 1,2,4,8 --mode both
+  # measured-data fusion policy + per-phase HUE profile (docs/PROFILING.md):
+  PYTHONPATH=src python -m repro.launch.serve --vision --model deit_t \
+      --fusion-policy auto --profile
   # data-parallel vision serving over an 8-device mesh:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --vision --model vit_edge --devices 8

@@ -26,10 +26,20 @@ split — `distributed.sharding.vision_param_specs` / `vision_batch_spec`).
 Buckets round up to a multiple of the data-axis size so every padded
 micro-batch lands pre-sharded before the one jitted call.
 
+Fusion is policy-driven per batch bucket: ``--fusion-policy
+{always,never,auto}`` (`core.schedule.FusionPolicy`), where ``auto``
+consults the measured fused-vs-unfused A/B data in ``--fusion-data`` (the
+bench JSON) and fuses only where measurement says it wins; ``--no-fuse``
+is shorthand for ``never``.  ``--profile`` runs the per-phase HUE
+profiler after each mode's drain (`VisionServer.profile_stats`,
+docs/PROFILING.md) and prints the measured-vs-modelled table.
+
 Usage (CPU examples):
   PYTHONPATH=src python -m repro.launch.serve --vision --list-models
   PYTHONPATH=src python -m repro.launch.serve --vision --model swin_t \
       --requests 32 --buckets 1,2,4,8 --mode both
+  PYTHONPATH=src python -m repro.launch.serve --vision --model deit_t \
+      --fusion-policy auto --profile
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --vision --model vit_edge --devices 8
 """
@@ -37,6 +47,7 @@ Usage (CPU examples):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -46,7 +57,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hue as hue_lib
+from repro.core import schedule as sched_lib
 from repro.core.quant import Calibrator
+from repro.core.schedule import FusionPolicy
 from repro.distributed import sharding as shd
 from repro.models import vision_registry, vit
 
@@ -101,7 +115,9 @@ class VisionServer:
                  qparams=None, calibrator: Optional[Calibrator] = None,
                  mode: str = "float",
                  buckets: Sequence[int] = (1, 2, 4, 8),
-                 mesh=None, data_parallel: Optional[int] = None):
+                 mesh=None, data_parallel: Optional[int] = None,
+                 fusion_policy: Optional[FusionPolicy] = None,
+                 model_name: Optional[str] = None):
         assert mode in ("float", "int8")
         if mode == "int8":
             assert qparams is not None, "int8 mode needs quantized params"
@@ -126,14 +142,37 @@ class VisionServer:
         self.qparams = qparams
         self.calibrator = calibrator
         self.mode = mode
+        self.model_name = model_name or getattr(cfg, "name", "model")
+        self.fusion_policy = fusion_policy
         self.buckets = round_buckets(buckets, self.dp)
         assert self.buckets and self.buckets[0] > 0, \
             f"batch buckets must be positive, got {buckets}"
+        # Fused or per-phase schedule, decided per bucket: without a
+        # policy every bucket follows ``cfg.fused`` (the pre-policy
+        # behaviour); a `FusionPolicy` overrides it from measured
+        # (model, mode, batch) A/B data — so a config the bench measured
+        # as a fused LOSS serves unfused instead of shipping it silently.
+        if fusion_policy is None:
+            self._bucket_fused = {b: bool(getattr(cfg, "fused", True))
+                                  for b in self.buckets}
+        else:
+            self._bucket_fused = fusion_policy.decisions(
+                self.model_name, mode, self.buckets)
         self.queue: List[VisionRequest] = []
         self.done: List[VisionRequest] = []
         self.n_batches = 0
         self.n_padded = 0
         self._rid = 0
+        self._forwards: Dict[bool, callable] = {}
+
+    def _forward_for(self, fused: bool):
+        """The jitted batched forward for one fusion variant (built
+        lazily — a policy that never flips serves exactly one).  jit's
+        own shape-keyed cache gives one compiled program per bucket."""
+        fn = self._forwards.get(fused)
+        if fn is not None:
+            return fn
+        cfg = dataclasses.replace(self.cfg, fused=fused)
         model_fwd = vision_registry.forward_fn(cfg)
         # Patchify INSIDE the compiled program: the host-side drain then
         # dispatches exactly one XLA call per micro-batch (the reshape
@@ -150,8 +189,9 @@ class VisionServer:
             def _fwd(images):
                 return model_fwd(p, vit.extract_patches(images, cfg.patch),
                                  cfg)
-        # jit's own shape-keyed cache gives one compiled program per bucket.
-        self._forward = jax.jit(_fwd)
+        fn = jax.jit(_fwd)
+        self._forwards[fused] = fn
+        return fn
 
     # -- request plane ----------------------------------------------------
 
@@ -193,8 +233,8 @@ class VisionServer:
             batch_in = shd.shard_vision_batch(images, self.mesh)
         else:
             batch_in = jnp.asarray(images)
-        logits = np.asarray(jax.block_until_ready(
-            self._forward(batch_in)))
+        forward = self._forward_for(self._bucket_fused[bucket])
+        logits = np.asarray(jax.block_until_ready(forward(batch_in)))
         t = time.perf_counter()
         for i, req in enumerate(batch):
             req.t_done = t
@@ -203,6 +243,44 @@ class VisionServer:
         self.done.extend(batch)
         self.n_batches += 1
         return take
+
+    def profile_stats(self, batch: Optional[int] = None, *,
+                      warmup: int = 1, repeats: int = 2) -> Dict:
+        """Profile one micro-batch through the per-phase replay and return
+        the live HUE report for this server's (model, mode).
+
+        The serving-side entry point to the observability loop: the same
+        rows `tools/hue_report.py` renders — per phase kind, measured ms
+        (block-until-ready per phase, best of ``repeats`` after
+        ``warmup`` compile replays) joined against the analytic
+        `perfmodel.expected_phase_cycles` / `expected_phase_macs`
+        attribution.  ``batch`` defaults to the smallest bucket; the
+        fusion variant profiled is the one this server would actually
+        serve that bucket with (policy-decided).  Runs outside the
+        drain loop — profiling traffic never perturbs queued requests.
+        """
+        bucket = int(batch) if batch else self.buckets[0]
+        fused = self._bucket_fused.get(bucket)
+        if fused is None:
+            fused = (self.fusion_policy.decide(self.model_name, self.mode,
+                                               bucket)
+                     if self.fusion_policy
+                     else bool(getattr(self.cfg, "fused", True)))
+        cfg = dataclasses.replace(self.cfg, fused=fused)
+        sched = vision_registry.make_schedule(cfg)
+        params = self.qparams if self.mode == "int8" else self.params
+        obs = self.calibrator if self.mode == "int8" else None
+        images = jnp.zeros((bucket, cfg.image, cfg.image, 3), jnp.float32)
+        patches = vit.extract_patches(images, cfg.patch)
+        _, records = sched_lib.profile_schedule(
+            sched, params, patches, observer=obs,
+            warmup=warmup, repeats=repeats)
+        report = hue_lib.live_hue_report(
+            vision_registry.make_spec(cfg), records, fused=fused)
+        report.update({"model": self.model_name, "config": cfg.name,
+                       "mode": self.mode, "batch": bucket, "fused": fused,
+                       "devices": self.dp})
+        return report
 
     def restamp_queued(self) -> None:
         """Reset queued requests' submit clocks (e.g. after a warm-up drain,
@@ -231,6 +309,11 @@ class VisionServer:
             "mode": self.mode,
             "requests": served,
             "devices": self.dp,
+            "fusion_policy": (self.fusion_policy.mode
+                              if self.fusion_policy else None),
+            "fused_buckets": {str(b): bool(f)
+                              for b, f in sorted(
+                                  self._bucket_fused.items())},
             "batches": self.n_batches - batches0,
             "padded": self.n_padded - padded0,
             "wall_s": dt,
@@ -278,15 +361,19 @@ def build_edge_vit(image: int = 32, patch: int = 8, dim: int = 96,
 
 def serve_model(cfg, *, requests: int, buckets: Sequence[int],
                 modes: Sequence[str], seed: int = 0, calib_images: int = 8,
-                name: Optional[str] = None,
-                devices: int = 1) -> List[Dict[str, float]]:
+                name: Optional[str] = None, devices: int = 1,
+                fusion_policy: Optional[FusionPolicy] = None,
+                profile: bool = False) -> List[Dict[str, float]]:
     """Init params, (optionally) quantize+calibrate, and drain ``requests``
     random images through a `VisionServer` per mode.  Returns one stats row
     per mode, tagged ``model`` = registry ``name`` (falling back to the
     config name — the same join key the bench JSON uses) and ``config`` =
     the concrete geometry's name.  ``devices`` > 1 shards each drain's
     batch axis across that many devices (calibration stays single-device;
-    only the frozen scales reach the sharded path)."""
+    only the frozen scales reach the sharded path).  ``fusion_policy``
+    overrides ``cfg.fused`` per bucket; ``profile`` additionally runs the
+    per-phase HUE profiler after each mode's drain, prints the
+    measured-vs-modelled table, and attaches the report to the row."""
     params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     images = rng.standard_normal(
@@ -301,7 +388,9 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
     for mode in modes:
         server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
                               mode=mode, buckets=buckets,
-                              data_parallel=devices)
+                              data_parallel=devices,
+                              fusion_policy=fusion_policy,
+                              model_name=name)
         server.submit_many(images)
         stats = server.run()
         stats["model"] = name or cfg.name
@@ -314,6 +403,16 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
               f"p50 {stats['latency_p50_ms']:.1f}ms "
               f"p99 {stats['latency_p99_ms']:.1f}ms "
               f"({stats['batches']} batches, {stats['padded']} padded)")
+        if fusion_policy is not None:
+            print(f"[vision-serve] fusion policy {fusion_policy.mode}: "
+                  f"fused buckets {stats['fused_buckets']}")
+        if profile:
+            report = server.profile_stats()
+            stats["hue_profile"] = report
+            print(hue_lib.render_hue_table(
+                report,
+                title=f"{stats['model']} ({cfg.name}) mode={mode} "
+                      f"fused={report['fused']} batch={report['batch']}"))
     return all_stats
 
 
@@ -338,7 +437,24 @@ def main(argv=None):
                     help="kernel dispatch override (default: config's)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="keep the per-phase schedule (disable the fused "
-                         "msa+mlp layer kernels) — for A/B comparison")
+                         "msa+mlp layer kernels) — for A/B comparison; "
+                         "shorthand for --fusion-policy never")
+    ap.add_argument("--fusion-policy", choices=FusionPolicy.MODES,
+                    default=None,
+                    help="fuse/don't-fuse decision per (model, mode, "
+                         "batch): 'always' (the default behaviour), "
+                         "'never' (per-phase A/B), or 'auto' — consult "
+                         "measured A/B data from --fusion-data and fuse "
+                         "only where it measured as a win")
+    ap.add_argument("--fusion-data",
+                    default=os.path.join("results",
+                                         "BENCH_vision_serve.json"),
+                    help="bench JSON seeding the 'auto' policy's measured "
+                         "(model, mode, batch) -> fusion_speedup table")
+    ap.add_argument("--profile", action="store_true",
+                    help="after each mode's drain, run the per-phase HUE "
+                         "profiler and print the measured-vs-modelled "
+                         "table (docs/PROFILING.md)")
     ap.add_argument("--devices", type=int, default=1,
                     help="data-parallel device count: shard each drain's "
                          "batch axis across this many devices (params "
@@ -360,13 +476,29 @@ def main(argv=None):
             f"[vision-serve] --devices {args.devices} but only "
             f"{jax.device_count()} visible; on CPU set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={args.devices}")
+    if args.no_fuse and args.fusion_policy:
+        raise SystemExit("[vision-serve] --no-fuse and --fusion-policy "
+                         "conflict; --no-fuse is shorthand for "
+                         "--fusion-policy never")
+    policy = None
+    if args.fusion_policy == "auto":
+        if os.path.exists(args.fusion_data):
+            policy = FusionPolicy.from_bench(args.fusion_data)
+        else:
+            print(f"[vision-serve] WARNING: --fusion-data "
+                  f"{args.fusion_data} not found; 'auto' falls back to "
+                  f"the modelled default (fuse)")
+            policy = FusionPolicy(mode="auto")
+    elif args.fusion_policy:
+        policy = FusionPolicy(mode=args.fusion_policy)
     cfg = vision_registry.build_cfg(args.model, full=args.full,
                                     backend=args.backend,
                                     fused=not args.no_fuse)
     modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
                             modes=modes, seed=args.seed, name=args.model,
-                            devices=args.devices)
+                            devices=args.devices, fusion_policy=policy,
+                            profile=args.profile)
 
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)

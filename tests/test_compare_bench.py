@@ -75,3 +75,22 @@ def test_rows_join_on_devices(tmp_path):
     assert rc == 0, out              # the 10 img/s row joined nothing
     assert "1 joined rows" in out
     assert "only in candidate" in out
+
+
+def test_fusion_speedup_diff_column(tmp_path):
+    """Rows where both files carry a measured fusion_speedup get an
+    old->new diff; rows without one (unfused, sharded) stay blank."""
+    fused_b = _row(fused=True)
+    fused_b["fusion_speedup"] = 1.20
+    fused_c = _row(fused=True)
+    fused_c["fusion_speedup"] = 0.90
+    unfused_b, unfused_c = _row(fused=False), _row(fused=False)
+    del unfused_b["fusion_speedup"], unfused_c["fusion_speedup"]
+    base = _write(tmp_path, "base.json", [fused_b, unfused_b])
+    cand = _write(tmp_path, "cand.json", [fused_c, unfused_c])
+    rc, out = _run(base, cand)
+    assert rc == 0, out
+    assert "fus_spd" in out
+    assert "1.20->0.90 -25%" in out
+    unfused_line = next(ln for ln in out.splitlines() if "unfused" in ln)
+    assert "->" not in unfused_line

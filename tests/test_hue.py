@@ -1,0 +1,302 @@
+"""Live HUE observability: the per-phase profile replay
+(`core.schedule.profile_schedule`), the measured-vs-modelled join
+(`core.hue.live_hue_report`), the measurement-driven `FusionPolicy`, and
+their serving/CLI entry points (`VisionServer.profile_stats`,
+`tools/hue_report.py`)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import hue as hue_lib
+from repro.core import perfmodel as pm
+from repro.core import schedule as sched_lib
+from repro.core.schedule import FusionPolicy
+from repro.launch.vision_serve import (VisionServer, build_edge_vit,
+                                       calibrate)
+from repro.models import vision_registry, vit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = build_edge_vit(image=16, patch=8, dim=48, heads=4, layers=2,
+                         n_classes=10)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    images = rng.standard_normal((4, cfg.image, cfg.image, 3)
+                                 ).astype(np.float32)
+    return cfg, params, images
+
+
+# A small bench record in the current schema: fusion_speedup on the fused
+# row of each A/B pair only, sharded rows without the key at all.
+BENCH_FIXTURE = {"bench": "vision_serve", "runs": [
+    {"model": "m", "mode": "float", "batch": 1, "fused": True,
+     "devices": 1, "fusion_speedup": 1.21, "policy_fused": True},
+    {"model": "m", "mode": "float", "batch": 1, "fused": False,
+     "devices": 1},
+    {"model": "m", "mode": "float", "batch": 4, "fused": True,
+     "devices": 1, "fusion_speedup": 0.80, "policy_fused": False},
+    {"model": "m", "mode": "float", "batch": 4, "fused": False,
+     "devices": 1},
+    {"model": "m", "mode": "int8", "batch": 4, "fused": True,
+     "devices": 1, "fusion_speedup": 0.95, "policy_fused": False},
+    {"model": "m", "mode": "float", "batch": 8, "fused": True,
+     "devices": 8},                       # sharded: no fusion_speedup key
+]}
+
+
+# ---------------------------------------------------------------------------
+# profile_schedule — the measurement primitive
+# ---------------------------------------------------------------------------
+
+
+def test_profile_schedule_records_and_logits_parity(tiny_setup):
+    """The profile replay is the same computation as `run_schedule`: one
+    record per phase, in order, with positive best-of times — and the
+    logits it returns match the plain executor's exactly."""
+    cfg, params, images = tiny_setup
+    sched = vit.schedule(cfg)
+    patches = vit.extract_patches(images, cfg.patch)
+    logits, records = sched_lib.profile_schedule(sched, params, patches,
+                                                 warmup=1, repeats=2)
+    ref = sched_lib.run_schedule(sched, params, patches)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert [r["index"] for r in records] == list(range(len(sched.phases)))
+    assert [r["kind"] for r in records] == [p.kind for p in sched.phases]
+    assert all(r["ms"] > 0 for r in records)
+
+
+def test_profile_schedule_rejects_unfrozen_calibrator(tiny_setup):
+    """Calibration is a host-side amax loop; profiling must refuse to
+    jit it rather than silently record garbage."""
+    from repro.core.quant import Calibrator
+    cfg, params, images = tiny_setup
+    qparams = vit.quantize_vit(params)
+    sched = vit.schedule(cfg)
+    patches = vit.extract_patches(images, cfg.patch)
+    with pytest.raises(AssertionError, match="frozen"):
+        sched_lib.profile_schedule(sched, qparams, patches,
+                                   observer=Calibrator())
+
+
+# ---------------------------------------------------------------------------
+# live_hue_report — the measured-vs-modelled join
+# ---------------------------------------------------------------------------
+
+
+def test_live_hue_report_shares_and_totals(tiny_setup):
+    cfg, params, images = tiny_setup
+    sched = vit.schedule(cfg)
+    patches = vit.extract_patches(images, cfg.patch)
+    _, records = sched_lib.profile_schedule(sched, params, patches,
+                                            warmup=1, repeats=1)
+    spec = vit.to_spec(cfg)
+    report = hue_lib.live_hue_report(spec, records, fused=cfg.fused)
+    rows = {r["phase"]: r for r in report["rows"]}
+    # fused edge-ViT: embed + layer (priced) and head (measured-only)
+    assert set(rows) == {"embed", "layer", "head"}
+    assert rows["layer"]["count"] == cfg.layers
+    assert rows["head"]["modelled_cycles"] is None      # unpriced kind
+    assert rows["head"]["hue_modelled"] is None
+    priced = [r for r in report["rows"] if r["modelled_share"] is not None]
+    assert abs(sum(r["measured_share"] for r in report["rows"]) - 1) < 1e-9
+    assert abs(sum(r["modelled_share"] for r in priced) - 1.0) < 1e-9
+    for r in priced:
+        assert 0.0 < r["hue_modelled"] <= 1.0
+        assert r["hue_measured"] is not None and r["hue_measured"] >= 0.0
+    total = report["total"]
+    assert total["boundary_status"] == "reclaimed"
+    # boundary cycles are the analytic unfused-minus-fused delta
+    assert abs(total["boundary_cycles"]
+               - pm.total_boundary_cycles(spec)) < 1e-6
+    # unfused report of the same records carries them instead
+    unfused = hue_lib.live_hue_report(spec, records, fused=False)
+    assert unfused["total"]["boundary_status"] == "carried"
+
+
+def test_render_hue_table_smoke(tiny_setup):
+    cfg, params, images = tiny_setup
+    sched = vit.schedule(cfg)
+    patches = vit.extract_patches(images, cfg.patch)
+    _, records = sched_lib.profile_schedule(sched, params, patches,
+                                            warmup=0, repeats=1)
+    report = hue_lib.live_hue_report(vit.to_spec(cfg), records,
+                                     fused=cfg.fused)
+    text = hue_lib.render_hue_table(report, title="tiny")
+    assert "[hue-report] tiny" in text
+    for token in ("phase", "meas_ms", "HUEmod%", "TOTAL",
+                  "boundary_cycles", "layer"):
+        assert token in text
+    assert "—" in text                       # head's unpriced columns
+
+
+def test_fusion_regressions_scans_fused_rows_only():
+    regs = hue_lib.fusion_regressions(BENCH_FIXTURE)
+    assert [(r["mode"], r["batch"]) for r in regs] == \
+        [("float", 4), ("int8", 4)]
+    assert all(r["fusion_speedup"] < 1.0 for r in regs)
+    # threshold is a parameter, and empty/keyless records scan clean
+    assert len(hue_lib.fusion_regressions(BENCH_FIXTURE,
+                                          threshold=1.3)) == 3
+    assert hue_lib.fusion_regressions({"runs": []}) == []
+
+
+# ---------------------------------------------------------------------------
+# FusionPolicy — measurement-driven fuse/don't-fuse
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_policy_static_modes():
+    assert FusionPolicy(mode="always").decide("m", "float", 4) is True
+    assert FusionPolicy(mode="never").decide("m", "float", 4) is False
+    with pytest.raises(AssertionError):
+        FusionPolicy(mode="sometimes")
+
+
+def test_fusion_policy_auto_from_bench_fixture():
+    policy = FusionPolicy.from_bench(BENCH_FIXTURE)
+    assert policy.mode == "auto"
+    # exact measurements: fuse iff measured speedup >= 1.0
+    assert policy.decide("m", "float", 1) is True       # 1.21
+    assert policy.decide("m", "float", 4) is False      # 0.80
+    assert policy.decide("m", "int8", 4) is False       # 0.95
+    # nearest-batch fallback within the same (model, mode)
+    assert policy.decide("m", "float", 2) is True       # nearest = 1
+    assert policy.decide("m", "float", 64) is False     # nearest = 4
+    # total miss -> the modelled default (fuse)
+    assert policy.decide("unseen", "float", 4) is True
+    assert policy.decisions("m", "float", (1, 4)) == {1: True, 4: False}
+    # the sharded row (no fusion_speedup key) must not seed anything
+    assert ("m", "float", 8) not in policy.measurements
+
+
+def test_fusion_policy_from_bench_path_and_threshold(tmp_path):
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(BENCH_FIXTURE))
+    policy = FusionPolicy.from_bench(str(path), threshold=1.3)
+    assert policy.decide("m", "float", 1) is False      # 1.21 < 1.3
+
+
+# ---------------------------------------------------------------------------
+# Serving-side entry points
+# ---------------------------------------------------------------------------
+
+
+def test_server_policy_never_matches_unfused_config(tiny_setup):
+    """A `never` policy must serve the per-phase executor — logits
+    identical to a server built on the unfused config."""
+    import dataclasses
+    cfg, params, images = tiny_setup
+    policied = VisionServer(cfg, params, mode="float", buckets=(4,),
+                            fusion_policy=FusionPolicy(mode="never"))
+    unfused_cfg = dataclasses.replace(cfg, fused=False)
+    plain = VisionServer(unfused_cfg, params, mode="float", buckets=(4,))
+    policied.submit_many(images)
+    plain.submit_many(images)
+    s1, s2 = policied.run(), plain.run()
+    assert s1["fusion_policy"] == "never"
+    assert s1["fused_buckets"] == {"4": False}
+    assert s2["fusion_policy"] is None
+    np.testing.assert_allclose(policied.done[0].logits,
+                               plain.done[0].logits, rtol=1e-5, atol=1e-5)
+
+
+def test_server_auto_policy_decides_per_bucket(tiny_setup):
+    cfg, params, images = tiny_setup
+    name = "m"
+    policy = FusionPolicy.from_bench(BENCH_FIXTURE)
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 4),
+                          fusion_policy=policy, model_name=name)
+    assert server._bucket_fused == {1: True, 4: False}
+    server.submit_many(images)
+    stats = server.run()
+    assert stats["fused_buckets"] == {"1": True, "4": False}
+
+
+def test_profile_stats_schema(tiny_setup):
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(2,),
+                          model_name="tiny")
+    report = server.profile_stats(repeats=1)
+    assert report["model"] == "tiny" and report["mode"] == "float"
+    assert report["batch"] == 2 and report["fused"] is True
+    assert report["devices"] == 1
+    kinds = [r["phase"] for r in report["rows"]]
+    assert kinds == ["embed", "layer", "head"]
+    assert report["total"]["measured_ms"] > 0
+    # profiling must not perturb the serving queue
+    assert not server.queue and not server.done
+
+
+def test_profile_stats_int8_runs_frozen_path(tiny_setup):
+    cfg, params, images = tiny_setup
+    qparams = vit.quantize_vit(params)
+    cal = calibrate(qparams, cfg, images, n_batches=2)
+    server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
+                          mode="int8", buckets=(2,))
+    report = server.profile_stats(repeats=1)
+    assert report["mode"] == "int8"
+    assert report["total"]["measured_ms"] > 0
+
+
+# ---------------------------------------------------------------------------
+# CLI entry points
+# ---------------------------------------------------------------------------
+
+
+def test_vision_serve_cli_rejects_conflicting_fusion_flags():
+    from repro.launch import vision_serve
+    with pytest.raises(SystemExit):
+        vision_serve.main(["--no-fuse", "--fusion-policy", "always",
+                           "--requests", "1"])
+
+
+def test_hue_report_fusion_warn(tmp_path):
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(BENCH_FIXTURE))
+    tool = os.path.join(REPO, "tools", "hue_report.py")
+    proc = subprocess.run([sys.executable, tool, "--fusion-warn",
+                           str(path)], capture_output=True, text=True,
+                          timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    warns = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith("::warning")]
+    assert len(warns) == 2                   # float b4 + int8 b4
+    # crashes must NOT be silent: bad JSON exits 2
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    proc = subprocess.run([sys.executable, tool, "--fusion-warn",
+                           str(bad)], capture_output=True, text=True,
+                          timeout=120)
+    assert proc.returncode == 2
+
+
+def test_hue_report_cli_end_to_end(tmp_path):
+    """One registered model through the real CLI: table on stdout and a
+    well-formed JSON record."""
+    tool = os.path.join(REPO, "tools", "hue_report.py")
+    out = tmp_path / "hue.json"
+    proc = subprocess.run(
+        [sys.executable, tool, "--models", "vit_edge", "--mode", "float",
+         "--batch", "1", "--warmup", "1", "--repeats", "1",
+         "--json-out", str(out)],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "[hue-report] vit_edge" in proc.stdout
+    assert "boundary_cycles" in proc.stdout
+    record = json.loads(out.read_text())
+    assert record["bench"] == "hue_report"
+    (report,) = record["reports"]
+    assert report["model"] == "vit_edge" and report["mode"] == "float"
+    assert {r["phase"] for r in report["rows"]} == \
+        {"embed", "layer", "head"}

@@ -147,3 +147,39 @@ def test_fusion_speedup_model_is_a_real_speedup():
         r = pm.fusion_speedup_model(pm.PAPER_MODELS[name])
         assert r["fused_cycles"] < r["unfused_cycles"]
         assert 1.0 < r["modelled_speedup"] < 2.0, (name, r)
+
+
+@pytest.mark.parametrize("name", ["vit_b16_256", "deit_t_224",
+                                  "swin_t_224", "tnt_s_224"])
+def test_expected_phase_macs_attribution_is_complete(name):
+    """The MAC twin of the cycle attribution: per-kind useful MACs must
+    sum to the model's total MAC count — fused and unfused alike (fusion
+    moves MACs between kinds, it never creates or drops any) — so the
+    per-phase HUE numerators of `core.hue` add up to the model-level
+    HUE's."""
+    spec = pm.PAPER_MODELS[name]
+    total = pm.count_macs(spec).total
+    unfused = pm.expected_phase_macs(spec, fused=False)
+    fused = pm.expected_phase_macs(spec, fused=True)
+    assert abs(sum(unfused.values()) - total) < 1e-6 * total
+    assert abs(sum(fused.values()) - total) < 1e-6 * total
+    # same keys as the cycle tables, kind for kind
+    assert set(unfused) == set(pm.expected_phase_cycles(spec, fused=False))
+    assert set(fused) == set(pm.expected_phase_cycles(spec, fused=True))
+    # fusion only merges msa+mlp (and the TNT inner pair) into layer
+    assert "layer" in fused and "msa" not in fused
+    merged = unfused.get("msa", 0.0) + unfused.get("mlp", 0.0)
+    assert abs(fused["layer"] - merged) < 1e-6 * max(merged, 1.0)
+
+
+@pytest.mark.parametrize("name", ["vit_b16_256", "deit_t_224",
+                                  "swin_t_224", "tnt_s_224"])
+def test_total_boundary_cycles_is_the_fusion_delta(name):
+    """`total_boundary_cycles` is exactly what fusing reclaims: the
+    difference between the unfused and fused cycle-table totals."""
+    spec = pm.PAPER_MODELS[name]
+    boundary = pm.total_boundary_cycles(spec)
+    unfused = sum(pm.expected_phase_cycles(spec, fused=False).values())
+    fused = sum(pm.expected_phase_cycles(spec, fused=True).values())
+    assert boundary > 0
+    assert abs((unfused - fused) - boundary) < 1e-6 * unfused

@@ -65,7 +65,7 @@ def compare(args) -> int:
 
     hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
            f"{'dev':>3} {'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
-           f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7}")
+           f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7} {'fus_spd':>14}")
     print(f"[compare-bench] {args.baseline} -> {args.candidate}: "
           f"{len(joined)} joined rows")
     print(hdr)
@@ -77,12 +77,22 @@ def compare(args) -> int:
         dp50 = _pct(c["latency_p50_ms"], b["latency_p50_ms"])
         worst = min(worst, dthr)
         model, mode, batch, fused, devices = key
+        # fusion_speedup lives on the fused row of each A/B pair only
+        # (post-observability schema; older files duplicated it — either
+        # way it only ever appears on rows where both sides carry it)
+        bfs, cfs = b.get("fusion_speedup"), c.get("fusion_speedup")
+        if isinstance(bfs, (int, float)) and isinstance(cfs, (int, float)):
+            fs = f"{bfs:.2f}->{cfs:.2f} {_pct(cfs, bfs):+.0f}%"
+        elif isinstance(cfs, (int, float)):
+            fs = f"new {cfs:.2f}"
+        else:
+            fs = ""
         print(f"{model:<10} {mode:<6} {batch:>5} "
               f"{'fused' if fused else 'unfused':<7} {devices:>3} "
               f"{b['throughput_img_s']:>10.1f} "
               f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "
               f"{b['latency_p50_ms']:>8.2f} {c['latency_p50_ms']:>8.2f} "
-              f"{dp50:>+7.1f}")
+              f"{dp50:>+7.1f} {fs:>14}")
 
     models = sorted({k[0] for k in joined})
     for m in models:

@@ -1,0 +1,180 @@
+#!/usr/bin/env python3
+"""Live per-phase HUE report — measured-vs-modelled cycle attribution.
+
+For each registered vision model (float and int8) this runs the per-phase
+profile replay (`core.schedule.profile_schedule`: block-until-ready per
+phase, warmup + best-of repeats) and joins the measured timings with the
+analytic ViTA cycle/MAC attribution (`core.perfmodel`) into the op-wise
+table of `core.hue` — phase kind, calls, measured ms and share, modelled
+ms and share, modelled HUE (the per-phase Table IV quantity) and measured
+HUE.  See docs/PROFILING.md for how to read the columns.
+
+Also the CI fusion-regression scanner: ``--fusion-warn BENCH.json`` skips
+profiling entirely and prints one GitHub-annotation ``::warning::`` line
+per fused bench row whose measured ``fusion_speedup`` is below 1.0 —
+configurations where the ``always`` policy ships a measured loss that
+``--fusion-policy auto`` would serve unfused.  Always exits 0 (the step
+is report-only); bad JSON exits 2 like `tools/compare_bench.py`.
+
+Run:
+  PYTHONPATH=src python tools/hue_report.py                 # all models
+  python tools/hue_report.py --models deit_t --mode int8 --batch 4
+  python tools/hue_report.py --fusion-policy auto \\
+      --fusion-data results/BENCH_vision_serve.json
+  python tools/hue_report.py --json-out results/HUE_report.json
+  python tools/hue_report.py --fusion-warn results/BENCH_vision_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+import jax                                                   # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.core import hue as hue_lib                        # noqa: E402
+from repro.core.schedule import FusionPolicy                 # noqa: E402
+from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
+from repro.models import vision_registry                     # noqa: E402
+
+CRASH_EXIT = 2
+
+
+def profile_model(name: str, mode: str, *, batch: int, warmup: int,
+                  repeats: int, policy, seed: int = 0) -> dict:
+    """One (model, mode) HUE report via the serving-side entry point —
+    the same `VisionServer.profile_stats` path a live server exposes, so
+    the CLI and the server report identical rows."""
+    cfg = vision_registry.build_cfg(name)
+    params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
+    qparams = cal = None
+    if mode == "int8":
+        qparams = vision_registry.quantize(params)
+        rng = np.random.default_rng(seed)
+        calib = rng.standard_normal(
+            (4, cfg.image, cfg.image, 3)).astype(np.float32)
+        cal = calibrate(qparams, cfg, calib, n_batches=2)
+    server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
+                          mode=mode, buckets=(batch,),
+                          fusion_policy=policy, model_name=name)
+    return server.profile_stats(batch, warmup=warmup, repeats=repeats)
+
+
+def fusion_warn(path: str) -> int:
+    """Print a ``::warning::`` annotation per measured fused regression."""
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[hue-report] ERROR: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return CRASH_EXIT
+    regs = hue_lib.fusion_regressions(record)
+    if not regs:
+        print(f"[hue-report] {path}: no fused rows measured below 1.0x — "
+              f"every fused configuration is a measured win")
+        return 0
+    for r in regs:
+        print(f"::warning title=fused slower than unfused::"
+              f"{r['model']} {r['mode']} batch={r['batch']} "
+              f"devices={r['devices']}: measured fusion_speedup "
+              f"{r['fusion_speedup']:.3f} < 1.0 — 'always' ships a loss "
+              f"here; '--fusion-policy auto' serves it unfused")
+    print(f"[hue-report] {path}: {len(regs)} fused configuration(s) "
+          f"measured slower than unfused (report-only; exit 0)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="hue_report",
+        description="Per-phase measured-vs-modelled HUE table for the "
+                    "registered vision models (docs/PROFILING.md)")
+    ap.add_argument("--models", default=None,
+                    help="comma-separated registry names "
+                         "(default: every registered model)")
+    ap.add_argument("--mode", choices=("float", "int8", "both"),
+                    default="both")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="micro-batch size profiled")
+    ap.add_argument("--warmup", type=int, default=1,
+                    help="untimed compile replays before timing")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed replays (per-phase best kept)")
+    ap.add_argument("--fusion-policy", choices=FusionPolicy.MODES,
+                    default=None,
+                    help="profile the variant this policy would serve "
+                         "(default: the config's fused schedule)")
+    ap.add_argument("--fusion-data",
+                    default=os.path.join("results",
+                                         "BENCH_vision_serve.json"),
+                    help="bench JSON seeding the 'auto' policy")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None,
+                    help="also write every report as one JSON record")
+    ap.add_argument("--fusion-warn", metavar="BENCH_JSON", default=None,
+                    help="scan-only mode: print ::warning:: annotations "
+                         "for fused bench rows measured below 1.0x and "
+                         "exit 0 (no profiling)")
+    args = ap.parse_args(argv)
+
+    if args.fusion_warn:
+        return fusion_warn(args.fusion_warn)
+
+    registered = vision_registry.list_models()
+    models = (args.models.split(",") if args.models else registered)
+    unknown = [m for m in models if m not in registered]
+    if unknown:
+        raise SystemExit(
+            f"[hue-report] unknown model(s): {', '.join(unknown)}; "
+            f"registered models are: {', '.join(registered)}")
+    modes = ("float", "int8") if args.mode == "both" else (args.mode,)
+
+    policy = None
+    if args.fusion_policy == "auto":
+        if os.path.exists(args.fusion_data):
+            policy = FusionPolicy.from_bench(args.fusion_data)
+        else:
+            print(f"[hue-report] WARNING: --fusion-data "
+                  f"{args.fusion_data} not found; 'auto' falls back to "
+                  f"the modelled default (fuse)")
+            policy = FusionPolicy(mode="auto")
+    elif args.fusion_policy:
+        policy = FusionPolicy(mode=args.fusion_policy)
+
+    reports = []
+    for name in models:
+        for mode in modes:
+            report = profile_model(name, mode, batch=args.batch,
+                                   warmup=args.warmup,
+                                   repeats=args.repeats,
+                                   policy=policy, seed=args.seed)
+            reports.append(report)
+            print(hue_lib.render_hue_table(
+                report,
+                title=f"{name} ({report['config']}) mode={mode} "
+                      f"fused={report['fused']} batch={report['batch']}"))
+            print()
+
+    if args.json_out:
+        record = {"bench": "hue_report", "models": models,
+                  "modes": list(modes), "batch": args.batch,
+                  "repeats": args.repeats,
+                  "fusion_policy": args.fusion_policy,
+                  "device_count": jax.device_count(),
+                  "reports": reports}
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"[hue-report] wrote {args.json_out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
