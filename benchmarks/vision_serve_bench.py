@@ -3,20 +3,29 @@
 Runs the `VisionServer` micro-batching driver over EACH model in
 `models.vision_registry` (ViT/DeiT/Swin/TNT through the same batched
 control program) for a sweep of batch buckets in both float and int8 (PTQ)
-modes, with the schedule executed BOTH fused (the default `layer`-phase
-kernels of `kernels/vita_layer.py`) and unfused (per-phase, `--no-fuse`
-semantics) — the A/B that prices the msa→mlp phase-boundary fusion.
+modes, with the schedule executed THREE ways: unfused (per-phase,
+`--no-fuse` semantics), fused (the per-layer `layer`-phase kernels of
+`kernels/vita_layer.py`), and GROUPED (the layer-group megakernel:
+``--fuse-group-size`` layers per `layer_group` pallas_call, cross-layer
+weight streaming) — the A/B/C that prices both the msa→mlp phase-boundary
+fusion and the per-layer kernel-launch windows grouping reclaims.
 
-Each FUSED row carries a ``fusion_speedup`` field (fused ÷ unfused
-throughput at the same model/mode/batch — recorded once, on the fused row
-of the pair) plus ``policy_fused``: the variant the active
+Each FUSED row carries a ``fusion_speedup`` field (that variant ÷ unfused
+throughput at the same model/mode/batch) plus ``group_size`` (1 on the
+per-layer row, the megakernel size on the grouped row — part of the join
+key) and, on grouped rows, ``speedup_vs_fused`` (grouped ÷ per-layer
+fused).  ``policy_fused`` records the variant the active
 ``--fusion-policy`` (always / never / auto) would actually serve for that
-cell, with ``auto`` deciding from this run's own measured A/B — so under
-``auto`` no configuration ships a variant its own measurement says is
-slower.  The per-model summary additionally records the analytic
-`core.perfmodel.fusion_speedup_model` prediction and the per-cell policy
-decisions, so the JSON is the measured-vs-modelled comparison in one
-artifact.  Rows are sorted by (model, mode, batch, fused) so
+cell, with ``auto`` deciding from this run's own measured A/B/C — so
+under ``auto`` no configuration ships a variant its own measurement says
+is slower.  Models whose schedules grouping cannot touch (TNT: inner
+blocks and fold re-entry interpose) reuse the per-layer fused measurement
+for the grouped row — the two compile to the IDENTICAL program, so a
+separate timing would only add noise.  The per-model summary additionally
+records the analytic `core.perfmodel.fusion_speedup_model` /
+`grouping_speedup_model` predictions and the per-cell policy decisions,
+so the JSON is the measured-vs-modelled comparison in one artifact.  Rows
+are sorted by (model, mode, batch, fused, group_size) so
 `tools/compare_bench.py` diffs are stable across runs.
 
 On a multi-device host (CI fakes 8 CPU devices via ``XLA_FLAGS``) each
@@ -28,12 +37,13 @@ mesh's data-axis size; 1 for unsharded rows) and ``device_count``
 (`jax.device_count()` of the run) so `tools/compare_bench.py` can join on
 (model, mode, batch, fused, devices) across hosts.
 
-The bench FAILS (non-zero exit) if any registered model is missing a bench
-row, if a model's int8 logits drift outside the calibration tolerance, if
-the fused schedule's logits drift from the unfused executor beyond the
-same tolerance, or if a sharded drain's logits drift from the
-single-device path — CI runs ``--smoke`` and uploads the JSON as an
-artifact.
+The bench FAILS (non-zero exit) if any registered model is missing a
+bench row (unfused, fused, AND grouped), if a model's int8 logits drift
+outside the calibration tolerance, if the fused OR grouped schedule's
+logits drift from the unfused executor beyond the same tolerance (float
+and int8, every model — the grouped-parity gate), or if a sharded drain's
+logits (fused or grouped) drift from the single-device path — CI runs
+``--smoke`` and uploads the JSON as an artifact.
 
 Run:  PYTHONPATH=src python benchmarks/vision_serve_bench.py [--smoke]
 """
@@ -51,12 +61,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 import jax                                                   # noqa: E402
 import numpy as np                                           # noqa: E402
 
-from repro.core.perfmodel import fusion_speedup_model        # noqa: E402
+from repro.core.perfmodel import (fusion_speedup_model,      # noqa: E402
+                                  grouping_speedup_model)
 from repro.core.quant import ptq_tolerance                   # noqa: E402
 from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
 from repro.models import vision_registry                     # noqa: E402
 
 OUT_PATH = os.path.join("results", "BENCH_vision_serve.json")
+DEFAULT_GROUP = 4
 
 
 def _timed_ab_drains(servers: dict, images: np.ndarray,
@@ -82,22 +94,36 @@ def _timed_ab_drains(servers: dict, images: np.ndarray,
 
 
 def bench_model(name: str, *, requests: int, batches, repeats: int,
-                seed: int = 0, policy_mode: str = "always"):
-    """One model through {float,int8} x batch buckets x {fused,unfused}
-    (plus sharded data-parallel rows on a multi-device host); returns
+                seed: int = 0, policy_mode: str = "always",
+                group_size: int = DEFAULT_GROUP):
+    """One model through {float,int8} x batch buckets x
+    {unfused,fused,grouped} (plus sharded data-parallel rows on a
+    multi-device host); returns
     (rows, ptq_parity, fusion_parity, sharded_parity_or_None).
     ``policy_mode`` tags each fused row with the serving decision the
     `core.schedule.FusionPolicy` would make for that cell (``auto``
     decides from the speedup measured in THIS run)."""
-    cfgs = {f: vision_registry.build_cfg(name, fused=f)
-            for f in (True, False)}
-    cfg = cfgs[True]
+    cfgs = {"unfused": vision_registry.build_cfg(name, fused=False),
+            "fused": vision_registry.build_cfg(name, fused=True),
+            "grouped": vision_registry.build_cfg(name, fused=True,
+                                                 fuse_group=group_size)}
+    cfg = cfgs["fused"]
+    # Where the grouping pass cannot form a single multi-layer group the
+    # grouped config compiles to the IDENTICAL schedule/program as the
+    # per-layer fused one; timing it separately would only manufacture a
+    # noise delta between two names for the same compiled function, so
+    # such models reuse the fused measurement for their grouped row.
+    grouping_active = any(
+        "_group" in k
+        for k in vision_registry.make_schedule(cfgs["grouped"]).counts())
+    variants = (("unfused", False, 1), ("fused", True, 1),
+                ("grouped", True, group_size))
     params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
     qparams = vision_registry.quantize(params)
     rng = np.random.default_rng(seed)
     images = rng.standard_normal(
         (requests, cfg.image, cfg.image, 3)).astype(np.float32)
-    # One calibration serves both executions: the calibration pass itself
+    # One calibration serves every execution: the calibration pass itself
     # always runs unfused (the observer needs every intermediate), and the
     # frozen per-site scales feed the fused kernels' in-grid requant chain.
     cal = calibrate(qparams, cfg, images[:max(requests // 2, 1)])
@@ -108,8 +134,11 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
     for mode in ("float", "int8"):
         for batch in batches:
             servers = {}
-            for fused in (True, False):
-                server = VisionServer(cfgs[fused], params, qparams=qparams,
+            for variant, _, _ in variants:
+                if variant == "grouped" and not grouping_active:
+                    continue
+                server = VisionServer(cfgs[variant], params,
+                                      qparams=qparams,
                                       calibrator=cal, mode=mode,
                                       buckets=(batch,))
                 server.submit_many(images)
@@ -117,53 +146,74 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                 server.restamp_queued()
                 server.run()
                 done = sorted(server.done, key=lambda r: r.rid)
-                logits[(mode, batch, fused)] = np.stack(
+                logits[(mode, batch, variant)] = np.stack(
                     [r.logits for r in done[:requests]])
-                servers[fused] = server
+                servers[variant] = server
             best = _timed_ab_drains(servers, images, repeats)
-            thr_u = best[False]["throughput_img_s"]
-            speedup = (best[True]["throughput_img_s"] / thr_u
-                       if thr_u > 0 else 0.0)
+            if not grouping_active:
+                best["grouped"] = dict(best["fused"])
+                logits[(mode, batch, "grouped")] = \
+                    logits[(mode, batch, "fused")]
+            thr_u = best["unfused"]["throughput_img_s"]
+            speedup = {v: (best[v]["throughput_img_s"] / thr_u
+                           if thr_u > 0 else 0.0)
+                       for v in ("fused", "grouped")}
+            vs_fused = (best["grouped"]["throughput_img_s"] /
+                        best["fused"]["throughput_img_s"]
+                        if best["fused"]["throughput_img_s"] > 0 else 0.0)
             # the serving decision the active policy makes for this cell
-            # (auto decides from THIS run's measured A/B, so the chosen
+            # (auto decides from THIS run's measured A/B/C, so the chosen
             # variant is the best measured one by construction)
-            policy_fused = (speedup >= 1.0 if policy_mode == "auto"
+            best_speedup = max(speedup.values())
+            policy_fused = (best_speedup >= 1.0 if policy_mode == "auto"
                             else policy_mode == "always")
+            policy_group = (group_size
+                            if policy_fused and policy_mode == "auto"
+                            and speedup["grouped"] >= speedup["fused"]
+                            else (group_size if policy_mode == "always"
+                                  else 1))
             decisions.append({"mode": mode, "batch": batch,
-                              "measured_speedup": speedup,
+                              "measured_speedup": speedup["fused"],
+                              "grouped_speedup": speedup["grouped"],
+                              "speedup_vs_fused": vs_fused,
                               "policy_fused": policy_fused,
-                              "best_fused": speedup >= 1.0})
-            for fused in (True, False):
-                stats = best[fused]
+                              "policy_group": policy_group,
+                              "best_fused": best_speedup >= 1.0})
+            for variant, fused, gs in variants:
+                stats = best[variant]
                 stats["model"] = name        # registry name (the join key)
                 stats["config"] = cfg.name   # concrete geometry
                 stats["batch"] = batch
                 stats["fused"] = fused
+                stats["group_size"] = gs
                 stats["device_count"] = jax.device_count()
                 if fused:
-                    # recorded ONCE, on the fused row of the A/B pair
-                    # (the pre-observability schema duplicated it onto
-                    # both rows — a wart compare_bench had to tolerate)
-                    stats["fusion_speedup"] = speedup
+                    # one fusion_speedup per fused row, each vs the SAME
+                    # unfused twin; the grouped row additionally records
+                    # its ratio over the per-layer fused chain
+                    stats["fusion_speedup"] = speedup[variant]
                     stats["policy_fused"] = policy_fused
+                    if variant == "grouped":
+                        stats["speedup_vs_fused"] = vs_fused
                 rows.append(stats)
-                tag = "fused" if fused else "unfused"
                 us = stats["wall_s"] / max(stats["requests"], 1) * 1e6
-                print(f"vision_serve.{name}.{mode}.b{batch}.{tag},{us:.0f},"
+                print(f"vision_serve.{name}.{mode}.b{batch}.{variant},"
+                      f"{us:.0f},"
                       f"img_per_s={stats['throughput_img_s']:.1f} "
                       f"p50_ms={stats['latency_p50_ms']:.1f} "
                       f"p99_ms={stats['latency_p99_ms']:.1f} "
-                      f"fusion_speedup={speedup:.3f} "
+                      f"fusion_speedup={speedup.get(variant, 1.0):.3f} "
                       f"policy_fused={policy_fused}")
 
-    scale = max(float(np.abs(logits[("float", b, False)]).max())
+    scale = max(float(np.abs(logits[("float", b, "unfused")]).max())
                 for b in batches)
     # -- PTQ parity (on the fused rows — the default serving path) --------
     agree = float(np.mean([
-        np.mean(np.argmax(logits[("float", b, True)], -1) ==
-                np.argmax(logits[("int8", b, True)], -1)) for b in batches]))
-    err = max(float(np.abs(logits[("float", b, True)] -
-                           logits[("int8", b, True)]).max())
+        np.mean(np.argmax(logits[("float", b, "fused")], -1) ==
+                np.argmax(logits[("int8", b, "fused")], -1))
+        for b in batches]))
+    err = max(float(np.abs(logits[("float", b, "fused")] -
+                           logits[("int8", b, "fused")]).max())
               for b in batches)
     ptq = {"model": name, "ptq_pred_agreement": agree,
            "ptq_logit_max_err": err, "float_logit_scale": scale,
@@ -171,25 +221,43 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
     print(f"vision_serve.{name}.ptq_agreement,0,frac={agree:.3f} "
           f"logit_err={err:.4f}/{scale:.4f}")
 
-    # -- fusion parity: fused executor vs unfused, both modes -------------
-    fuse_err = max(float(np.abs(logits[(m, b, True)] -
-                                logits[(m, b, False)]).max())
+    # -- fusion parity: fused AND grouped executors vs unfused, both modes
+    fuse_err = max(float(np.abs(logits[(m, b, "fused")] -
+                                logits[(m, b, "unfused")]).max())
                    for m in ("float", "int8") for b in batches)
-    modelled = fusion_speedup_model(
-        vision_registry.make_spec(cfg))["modelled_speedup"]
-    measured = [r["fusion_speedup"] for r in rows if r["fused"]]
+    group_err = max(float(np.abs(logits[(m, b, "grouped")] -
+                                 logits[(m, b, "unfused")]).max())
+                    for m in ("float", "int8") for b in batches)
+    spec = vision_registry.make_spec(cfg)
+    modelled = fusion_speedup_model(spec)["modelled_speedup"]
+    modelled_grp = grouping_speedup_model(
+        spec, group_size=group_size)["modelled_speedup"]
+    measured = [r["fusion_speedup"] for r in rows
+                if r["fused"] and r["group_size"] == 1]
+    measured_grp = [r["fusion_speedup"] for r in rows
+                    if r["fused"] and r["group_size"] > 1]
     fusion = {"model": name, "fusion_logit_max_err": fuse_err,
+              "grouped_logit_max_err": group_err,
               "float_logit_scale": scale,
-              "within_tolerance": bool(fuse_err <= ptq_tolerance(scale)),
+              "within_tolerance": bool(
+                  max(fuse_err, group_err) <= ptq_tolerance(scale)),
               "measured_speedup_min": min(measured),
               "measured_speedup_max": max(measured),
+              "grouped_speedup_min": min(measured_grp),
+              "grouped_speedup_max": max(measured_grp),
+              "group_size": group_size,
+              "grouping_active": grouping_active,
               "modelled_speedup": modelled,
+              "modelled_grouping_speedup": modelled_grp,
               "fusion_policy": policy_mode,
               "decisions": decisions}
     print(f"vision_serve.{name}.fusion_parity,0,"
           f"logit_err={fuse_err:.6f}/{scale:.4f} "
+          f"grouped_err={group_err:.6f} "
           f"speedup={min(measured):.3f}..{max(measured):.3f} "
-          f"modelled={modelled:.3f} policy={policy_mode}")
+          f"grouped={min(measured_grp):.3f}..{max(measured_grp):.3f} "
+          f"modelled={modelled:.3f}/{modelled_grp:.3f} "
+          f"policy={policy_mode}")
 
     # -- sharded rows + parity: data-parallel mesh over every device ------
     sharded = None
@@ -197,42 +265,54 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
     if ndev > 1:
         batch = max(batches)
         errs = {}
-        for mode in ("float", "int8"):
-            server = VisionServer(cfgs[True], params, qparams=qparams,
-                                  calibrator=cal, mode=mode,
-                                  buckets=(batch,), data_parallel=ndev)
-            server.submit_many(images)
-            server.run()                     # compile warm-up drain
-            done = sorted(server.done, key=lambda r: r.rid)
-            sl = np.stack([r.logits for r in done[:requests]])
-            errs[mode] = float(
-                np.abs(sl - logits[(mode, batch, True)]).max())
-            stats = _timed_ab_drains({"sharded": server}, images,
-                                     repeats)["sharded"]
-            stats["model"] = name
-            stats["config"] = cfg.name
-            # the bucket actually drained: ``batch`` rounded up to a
-            # multiple of the device count — NOT the nominal sweep batch,
-            # so cross-host joins compare like against like
-            stats["batch"] = server.buckets[0]
-            stats["fused"] = True
-            stats["device_count"] = ndev
-            # no fusion_speedup field: there is no unfused sharded twin
-            rows.append(stats)
-            print(f"vision_serve.{name}.{mode}.b{stats['batch']}"
-                  f".sharded{ndev},"
-                  f"{stats['wall_s'] / max(stats['requests'], 1) * 1e6:.0f},"
-                  f"img_per_s={stats['throughput_img_s']:.1f} "
-                  f"logit_err={errs[mode]:.6f}")
+        sharded_variants = [("fused", 1)]
+        if grouping_active:
+            sharded_variants.append(("grouped", group_size))
+        for variant, gs in sharded_variants:
+            for mode in ("float", "int8"):
+                server = VisionServer(cfgs[variant], params,
+                                      qparams=qparams,
+                                      calibrator=cal, mode=mode,
+                                      buckets=(batch,), data_parallel=ndev)
+                server.submit_many(images)
+                server.run()                 # compile warm-up drain
+                done = sorted(server.done, key=lambda r: r.rid)
+                sl = np.stack([r.logits for r in done[:requests]])
+                errs[(variant, mode)] = float(
+                    np.abs(sl - logits[(mode, batch, variant)]).max())
+                stats = _timed_ab_drains({"sharded": server}, images,
+                                         repeats)["sharded"]
+                stats["model"] = name
+                stats["config"] = cfg.name
+                # the bucket actually drained: ``batch`` rounded up to a
+                # multiple of the device count — NOT the nominal sweep
+                # batch, so cross-host joins compare like against like
+                stats["batch"] = server.buckets[0]
+                stats["fused"] = True
+                stats["group_size"] = gs
+                stats["device_count"] = ndev
+                # no fusion_speedup field: no unfused sharded twin
+                rows.append(stats)
+                print(
+                    f"vision_serve.{name}.{mode}.b{stats['batch']}"
+                    f".sharded{ndev}.{variant},"
+                    f"{stats['wall_s'] / max(stats['requests'], 1) * 1e6:.0f},"
+                    f"img_per_s={stats['throughput_img_s']:.1f} "
+                    f"logit_err={errs[(variant, mode)]:.6f}")
         sharded = {"model": name, "devices": ndev,
-                   "sharded_float_logit_max_err": errs["float"],
-                   "sharded_int8_logit_max_err": errs["int8"],
+                   "sharded_float_logit_max_err": errs[("fused", "float")],
+                   "sharded_int8_logit_max_err": errs[("fused", "int8")],
+                   "sharded_grouped_logit_max_err": (
+                       max(e for (v, _), e in errs.items()
+                           if v == "grouped") if grouping_active else None),
                    "float_logit_scale": scale,
                    "within_tolerance": bool(
                        max(errs.values()) <= ptq_tolerance(scale))}
         print(f"vision_serve.{name}.sharded_parity,0,"
-              f"float_err={errs['float']:.6f} int8_err={errs['int8']:.6f}"
-              f"/{scale:.4f} devices={ndev}")
+              f"float_err={errs[('fused', 'float')]:.6f} "
+              f"int8_err={errs[('fused', 'int8')]:.6f}"
+              f"/{scale:.4f} devices={ndev} "
+              f"grouped_err={sharded['sharded_grouped_logit_max_err']}")
     return rows, ptq, fusion, sharded
 
 
@@ -250,9 +330,16 @@ def main(argv=None) -> dict:
                     help="serving decision recorded per cell "
                          "(policy_fused on fused rows): 'auto' picks the "
                          "variant this run measured as faster — the bench "
-                         "always measures BOTH variants regardless")
+                         "always measures every variant regardless")
+    ap.add_argument("--fuse-group-size", type=int, default=DEFAULT_GROUP,
+                    help="layer-group megakernel size for the grouped "
+                         "variant rows (group_size in the join key)")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
+    if args.fuse_group_size < 2:
+        raise SystemExit("[vision-serve-bench] --fuse-group-size must be "
+                         ">= 2 (the grouped variant must differ from the "
+                         "per-layer fused one)")
 
     registered = vision_registry.list_models()
     models = args.models.split(",") if args.models else list(registered)
@@ -268,7 +355,8 @@ def main(argv=None) -> dict:
     for name in models:
         rows, ptq, fusion, sharded = bench_model(
             name, requests=requests, batches=batches, repeats=args.repeats,
-            policy_mode=args.fusion_policy)
+            policy_mode=args.fusion_policy,
+            group_size=args.fuse_group_size)
         runs.extend(rows)
         ptq_parities.append(ptq)
         fusion_parities.append(fusion)
@@ -278,11 +366,13 @@ def main(argv=None) -> dict:
     # Deterministic row order regardless of sweep/insertion order, so JSON
     # diffs (tools/compare_bench.py) are stable across runs.
     runs.sort(key=lambda r: (r["model"], r["mode"], r["batch"],
-                             not r["fused"], r.get("devices", 1)))
+                             not r["fused"], r.get("group_size", 1),
+                             r.get("devices", 1)))
     record = {"bench": "vision_serve", "smoke": args.smoke,
               "models": models, "requests_per_run": requests,
               "batches": list(batches), "repeats": args.repeats,
               "fusion_policy": args.fusion_policy,
+              "fuse_group_size": args.fuse_group_size,
               "device_count": jax.device_count(),
               "ptq_parity": ptq_parities,
               "fusion_parity": fusion_parities,
@@ -294,17 +384,21 @@ def main(argv=None) -> dict:
     print(f"[vision-serve-bench] wrote {args.out}")
 
     # -- registry coverage + parity gates (CI fails on any) ---------------
-    want = {(m, mode, fused) for m in models for mode in ("float", "int8")
-            for fused in (True, False)}
-    have = {(r["model"], r["mode"], r["fused"]) for r in runs}
+    want = {(m, mode, fused, gs) for m in models
+            for mode in ("float", "int8")
+            for fused, gs in ((True, 1), (False, 1),
+                              (True, args.fuse_group_size))}
+    have = {(r["model"], r["mode"], r["fused"], r.get("group_size", 1))
+            for r in runs}
     missing = sorted(want - have)
     if missing:
-        detail = ", ".join(f"{m} [{mode}{'' if f else ', unfused'}]"
-                           for m, mode, f in missing)
+        detail = ", ".join(
+            f"{m} [{mode}, fused={f}, group={g}]"
+            for m, mode, f, g in missing)
         raise SystemExit(
             f"[vision-serve-bench] registry coverage gate failed: no bench "
-            f"row for {detail} — every registered model must emit fused and "
-            f"unfused float/int8 rows in {args.out}")
+            f"row for {detail} — every registered model must emit unfused, "
+            f"fused, and grouped float/int8 rows in {args.out}")
     bad = [p["model"] for p in ptq_parities if not p["within_tolerance"]]
     if bad:
         raise SystemExit(
@@ -313,9 +407,9 @@ def main(argv=None) -> dict:
     bad = [p["model"] for p in fusion_parities if not p["within_tolerance"]]
     if bad:
         raise SystemExit(
-            f"[vision-serve-bench] fusion parity gate failed: fused-schedule "
-            f"logits drift from the unfused executor beyond the calibration "
-            f"tolerance for: {', '.join(bad)}")
+            f"[vision-serve-bench] fusion parity gate failed: fused- or "
+            f"grouped-schedule logits drift from the unfused executor "
+            f"beyond the calibration tolerance for: {', '.join(bad)}")
     if jax.device_count() > 1:
         missing = sorted(set(models) -
                          {p["model"] for p in sharded_parities})

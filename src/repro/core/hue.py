@@ -44,6 +44,7 @@ UNPRICED_KINDS = ("head",)
 def live_hue_report(spec: pm.VisionModelSpec,
                     records: Sequence[Dict], *,
                     fused: bool,
+                    group_size: int = 1,
                     hw: Optional[pm.VitaHW] = None) -> Dict:
     """Join measured per-phase records with the analytic attribution.
 
@@ -52,11 +53,18 @@ def live_hue_report(spec: pm.VisionModelSpec,
     ``{"rows": [...], "total": {...}}`` where rows are per phase KIND in
     schedule order and the total row carries the end-to-end HUE and the
     phase-boundary cycles the fused schedule reclaims (or the unfused one
-    still pays).
+    still pays).  ``group_size > 1`` prices a layer-group megakernel
+    schedule: the groupable layers' attribution moves under the
+    ``layer_group`` key (matching the measured kinds) and the total row
+    additionally reports the per-boundary launch cycles grouping
+    reclaims.
     """
     hw = hw or pm.VitaHW()
-    cycles = pm.expected_phase_cycles(spec, hw, fused=fused)
-    macs = pm.expected_phase_macs(spec, hw, fused=fused)
+    group_size = group_size if fused else 1
+    cycles = pm.expected_phase_cycles(spec, hw, fused=fused,
+                                      group_size=group_size)
+    macs = pm.expected_phase_macs(spec, hw, fused=fused,
+                                  group_size=group_size)
 
     kinds: List[str] = []
     meas_ms: Dict[str, float] = {}
@@ -116,6 +124,12 @@ def live_hue_report(spec: pm.VisionModelSpec,
         # fused schedules RECLAIM the msa->mlp round-trips; unfused ones
         # still CARRY them (they are inside the msa/mlp rows above)
         "boundary_status": "reclaimed" if fused else "carried",
+        "group_size": group_size,
+        # per-layer kernel-launch windows the layer-group megakernel
+        # reclaims at this group size (0 at group_size=1: nothing grouped)
+        "launch_cycles_reclaimed": (
+            pm.total_launch_cycles(spec, hw, group_size=1)
+            - pm.total_launch_cycles(spec, hw, group_size=group_size)),
     }
     return {"rows": rows, "total": total}
 
@@ -155,6 +169,10 @@ def render_hue_table(report: Dict, *, title: str = "") -> str:
         f"{_fmt(t['hue_measured'], 9, pct=True)}  "
         f"boundary_cycles={t['boundary_cycles']:.0f} "
         f"({t['boundary_status']})")
+    if t.get("group_size", 1) > 1:
+        lines.append(
+            f"{'':<12} group_size={t['group_size']} "
+            f"launch_cycles_reclaimed={t['launch_cycles_reclaimed']:.0f}")
     return "\n".join(lines)
 
 
@@ -174,5 +192,6 @@ def fusion_regressions(record: Dict, *,
             out.append({"model": r.get("model"), "mode": r.get("mode"),
                         "batch": r.get("batch"),
                         "devices": r.get("devices", 1),
+                        "group_size": int(r.get("group_size", 1)),
                         "fusion_speedup": fs})
     return out

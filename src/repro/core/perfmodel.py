@@ -499,9 +499,50 @@ def phase_boundary_cycles(hw: VitaHW, s: StageSpec,
     return 2.0 * n * d * 4.0 / hw.dram_bytes_per_cycle
 
 
+def layer_launch_cycles(hw: VitaHW, s: StageSpec,
+                        inner: bool = False) -> float:
+    """Idle cycles at one fused-layer boundary: the kernel (re)launch
+    window during which the NEXT layer's first-head Q/K/V weight blocks
+    must load before its head pipeline can start — 3 int8 weight columns
+    of ``dim x head_dim`` over the DRAM interface.  The layer-group
+    megakernel hides this window behind the previous layer's MLP tail
+    (revolving-buffer prefetch); per-layer chains pay it at every block
+    boundary."""
+    if inner:
+        d, dh = s.inner_dim, s.inner_head_dim
+    else:
+        d, dh = s.dim, s.head_dim
+    return 3.0 * d * dh / hw.dram_bytes_per_cycle
+
+
+def stage_groupable(s: StageSpec) -> bool:
+    """Whether `fuse_schedule`'s grouping pass can form multi-layer groups
+    in this stage: TNT stages interleave inner blocks and fold re-entry
+    between outer layers (never adjacent), and multi-window Swin stages
+    alternate plain/shifted blocks (adjacent layers differ in shift).
+    Single-window stages — columnar ViT/DeiT and Swin's final stages —
+    group freely."""
+    return s.layers > 1 and not s.inner_tokens and s.n_windows == 1
+
+
+def _stage_group_plan(layers: int, group_size: int):
+    """(layers_in_groups, plain_layers, n_launches) for one groupable
+    stage chunked greedily into groups of at most ``group_size`` — the
+    exact chunking `fuse_schedule` performs (a leftover chunk of one
+    stays a plain per-layer phase)."""
+    if group_size <= 1:
+        return 0, layers, layers
+    chunks = [group_size] * (layers // group_size)
+    if layers % group_size:
+        chunks.append(layers % group_size)
+    grouped = sum(c for c in chunks if c > 1)
+    return grouped, layers - grouped, len(chunks)
+
+
 def expected_phase_cycles(m: VisionModelSpec,
                           hw: Optional[VitaHW] = None, *,
-                          fused: bool = False) -> Dict[str, float]:
+                          fused: bool = False,
+                          group_size: int = 1) -> Dict[str, float]:
     """Expected cycles per `core.schedule` phase KIND for one image.
 
     Keys mirror the compiled schedule: ``embed / msa / mlp / merge /
@@ -509,6 +550,14 @@ def expected_phase_cycles(m: VisionModelSpec,
     replaced by ``layer`` (and ``inner_layer``) when ``fused``.  Unfused
     pairs carry the boundary round-trip (split between the two halves,
     like the aux LN/residual/requant passes); fused layers elide it.
+
+    ``group_size > 1`` (fused only) relabels the layers that
+    `fuse_schedule` would collapse into ``layer_group`` phases under that
+    key — the totals are conserved exactly (grouping moves work between
+    kinds, it never changes it); the cycles grouping *reclaims* are the
+    separate launch-window account of `total_launch_cycles` /
+    `grouping_speedup_model`, which the per-kind table deliberately
+    leaves out so fused-vs-grouped tables stay comparable row by row.
     """
     hw = hw or VitaHW()
     out: Dict[str, float] = {}
@@ -518,9 +567,17 @@ def expected_phase_cycles(m: VisionModelSpec,
 
     def add_pair(kind_msa: str, kind_mlp: str, kind_layer: str,
                  msa_c: float, mlp_c: float, aux_c: float, bnd: float,
-                 layers: int) -> None:
+                 layers: int, groupable: bool = False) -> None:
         if fused:
-            add(kind_layer, (msa_c + mlp_c + aux_c) * layers)
+            per_layer = msa_c + mlp_c + aux_c
+            if groupable and group_size > 1:
+                grouped, plain, _ = _stage_group_plan(layers, group_size)
+                if grouped:
+                    add(kind_layer + "_group", per_layer * grouped)
+                if plain:
+                    add(kind_layer, per_layer * plain)
+            else:
+                add(kind_layer, per_layer * layers)
         else:
             add(kind_msa, (msa_c + aux_c / 2 + bnd / 2) * layers)
             add(kind_mlp, (mlp_c + aux_c / 2 + bnd / 2) * layers)
@@ -537,7 +594,8 @@ def expected_phase_cycles(m: VisionModelSpec,
         add_pair("msa", "mlp", "layer",
                  sum(p.cycles for p in msa_phase(hw, s)),
                  mlp_phase(hw, s).cycles, aux_phase(hw, s).cycles,
-                 phase_boundary_cycles(hw, s), s.layers)
+                 phase_boundary_cycles(hw, s), s.layers,
+                 groupable=stage_groupable(s))
         if s.patch_merging:
             add("merge", patch_merging_phase(hw, s).cycles)
     return out
@@ -545,7 +603,8 @@ def expected_phase_cycles(m: VisionModelSpec,
 
 def expected_phase_macs(m: VisionModelSpec,
                         hw: Optional[VitaHW] = None, *,
-                        fused: bool = False) -> Dict[str, float]:
+                        fused: bool = False,
+                        group_size: int = 1) -> Dict[str, float]:
     """Useful MACs per `core.schedule` phase KIND for one image.
 
     The MAC twin of `expected_phase_cycles` (same keys): where that table
@@ -555,6 +614,8 @@ def expected_phase_macs(m: VisionModelSpec,
     profiler (`core.hue`) reports per phase.  Fusion moves MACs between
     keys (msa+mlp -> layer) but never changes the total: boundary
     round-trips and the aux LN/residual/requant passes are pure overhead.
+    ``group_size`` relabels the groupable share to ``layer_group`` exactly
+    as `expected_phase_cycles` does — MACs, too, are conserved.
     """
     hw = hw or VitaHW()
     out: Dict[str, float] = {}
@@ -563,9 +624,18 @@ def expected_phase_macs(m: VisionModelSpec,
         out[kind] = out.get(kind, 0.0) + float(macs)
 
     def add_pair(kind_msa: str, kind_mlp: str, kind_layer: str,
-                 msa_m: float, mlp_m: float, layers: int) -> None:
+                 msa_m: float, mlp_m: float, layers: int,
+                 groupable: bool = False) -> None:
         if fused:
-            add(kind_layer, (msa_m + mlp_m) * layers)
+            per_layer = msa_m + mlp_m
+            if groupable and group_size > 1:
+                grouped, plain, _ = _stage_group_plan(layers, group_size)
+                if grouped:
+                    add(kind_layer + "_group", per_layer * grouped)
+                if plain:
+                    add(kind_layer, per_layer * plain)
+            else:
+                add(kind_layer, per_layer * layers)
         else:
             add(kind_msa, msa_m * layers)
             add(kind_mlp, mlp_m * layers)
@@ -580,7 +650,8 @@ def expected_phase_macs(m: VisionModelSpec,
             add("fold", fold_phase(hw, s).useful_macs * s.layers)
         add_pair("msa", "mlp", "layer",
                  sum(p.useful_macs for p in msa_phase(hw, s)),
-                 mlp_phase(hw, s).useful_macs, s.layers)
+                 mlp_phase(hw, s).useful_macs, s.layers,
+                 groupable=stage_groupable(s))
         if s.patch_merging:
             add("merge", patch_merging_phase(hw, s).useful_macs)
     return out
@@ -613,6 +684,46 @@ def fusion_speedup_model(m: VisionModelSpec,
         "unfused_cycles": unfused,
         "fused_cycles": fused,
         "modelled_speedup": unfused / fused,
+    }
+
+
+def total_launch_cycles(m: VisionModelSpec,
+                        hw: Optional[VitaHW] = None, *,
+                        group_size: int = 1) -> float:
+    """Kernel-launch / first-weight-load idle cycles of one image through
+    the FUSED schedule at the given layer-group size: one
+    `layer_launch_cycles` window per emitted layer(-group) phase.  At
+    ``group_size=1`` every fused layer pays the window; grouping
+    amortises each stage down to one window per greedy chunk (the
+    megakernel streams layer i+1's Q/K/V during layer i's MLP tail).
+    Inner (TNT) blocks are never grouped and always pay per layer."""
+    hw = hw or VitaHW()
+    total = 0.0
+    for s in m.stages:
+        if s.inner_tokens:
+            total += s.layers * layer_launch_cycles(hw, s, inner=True)
+        g = group_size if stage_groupable(s) else 1
+        _, _, n_launches = _stage_group_plan(s.layers, g)
+        total += n_launches * layer_launch_cycles(hw, s)
+    return total
+
+
+def grouping_speedup_model(m: VisionModelSpec,
+                           hw: Optional[VitaHW] = None, *,
+                           group_size: int = 4) -> Dict[str, float]:
+    """Modelled end-to-end speedup of the layer-group megakernel over the
+    per-layer fused chain (the analytic counterpart of the bench's
+    grouped ``speedup_vs_fused``): compute cycles are identical, so the
+    ratio isolates the reclaimed per-boundary launch windows."""
+    hw = hw or VitaHW()
+    compute = sum(expected_phase_cycles(m, hw, fused=True).values())
+    fused = compute + total_launch_cycles(m, hw, group_size=1)
+    grouped = compute + total_launch_cycles(m, hw, group_size=group_size)
+    return {
+        "fused_cycles": fused,
+        "grouped_cycles": grouped,
+        "launch_cycles_reclaimed": fused - grouped,
+        "modelled_speedup": fused / grouped,
     }
 
 

@@ -188,6 +188,19 @@ def quantize_vision_params(params: Any) -> Any:
     return _q(params)
 
 
+def stack_qtensors(qts) -> QTensor:
+    """Stack per-layer `QTensor`s into one leading-axis (L, ...) QTensor.
+
+    The layer-group megakernel consumes whole groups of encoder blocks as
+    stacked operands; the frozen per-channel weight scales ride the stacked
+    pytree (scale axis 0 = layer), so grouped int8 requantizes at exactly
+    the per-layer scales and stays bit-exact with the unfused path.
+    """
+    qts = list(qts)
+    return QTensor(jnp.stack([q.values for q in qts]),
+                   jnp.stack([q.scale for q in qts]))
+
+
 def dequantize_params(params: Any) -> Any:
     def _dq(leaf):
         return leaf.dequantize() if isinstance(leaf, QTensor) else leaf

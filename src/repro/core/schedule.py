@@ -46,6 +46,23 @@ single fused phase:
                  the fold outside and runs the fused kernel on the
                  (B*nW, n, C) layout.
 
+A third pass (the ``group_size`` knob of the same `fuse_schedule` entry)
+collapses *runs* of compatible fused layers into multi-layer megakernel
+phases:
+
+  * ``layer_group`` / ``inner_layer_group`` — up to ``group_size``
+                 consecutive encoder blocks of one stage through ONE
+                 Pallas call: per-layer weight pytrees stack into
+                 leading-axis (L, ...) operands and the grid grows a layer
+                 axis, so layer i+1's Q/K/V block DMA is prefetched while
+                 layer i's MLP tail computes — the remaining half of
+                 ViTA's cross-phase overlap (Sec. III), which per-layer
+                 fusion stops short of at every block boundary.  Members
+                 must share geometry (grid/window/shift/heads) and stage;
+                 Swin's alternating shifted blocks and TNT's interleaved
+                 inner/fold phases therefore never group, and degenerate
+                 groups of one stay plain ``layer`` phases.
+
 Models (`models/vit.py`, `models/swin.py`, `models/tnt.py`) no longer own
 forward loops: they emit a spec, `compile_schedule` turns it into phases
 (fused by default; ``fused=False`` on the config — or ``--no-fuse`` on the
@@ -70,7 +87,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.perfmodel import VisionModelSpec
-from repro.core.quant import INT8_MAX, QTensor
+from repro.core.quant import INT8_MAX, QTensor, stack_qtensors
 from repro.kernels import ops
 
 NEG_INF = -1e30
@@ -99,6 +116,9 @@ class Phase:
     norm: bool = False             # embed: LayerNorm after projection
     inner_tokens: int = 0          # embed: pixel tokens per patch (TNT; 0
                                    # -> single-stream frontend)
+    members: Tuple["Phase", ...] = ()  # layer_group: the grouped per-layer
+                                   # phases, in execution order (empty for
+                                   # every other kind)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,7 +230,59 @@ FUSABLE_PAIRS = {
 }
 
 
-def fuse_schedule(sched: Schedule) -> Schedule:
+# Fused per-block kinds the grouping pass may collapse into multi-layer
+# megakernel phases (the FUSABLE_PAIRS analogue one level up); a fused
+# kind is grouping-eligible only if it appears here.
+GROUPABLE_KINDS = {
+    "layer": "layer_group",
+    "inner_layer": "inner_layer_group",
+}
+
+
+def _groupable(p: Phase, q: Phase) -> bool:
+    """True iff adjacent fused layer ``q`` may join ``p``'s layer group:
+    same fused kind, identical geometry (the group kernel performs ONE
+    window fold and shares one stacked-operand layout), and the same
+    stage — param paths differing only in the trailing block index.  The
+    stage rule is what keeps groups from straddling Swin patch-merging or
+    TNT fold re-entry even in hand-edited schedules; in compiled ones a
+    merge/fold phase already sits between stages."""
+    return (q.kind == p.kind
+            and q.grid == p.grid and q.window == p.window
+            and q.shift == p.shift and q.heads == p.heads
+            and len(q.path) == len(p.path)
+            and q.path[:-1] == p.path[:-1])
+
+
+def _group_layers(phases, group_size: int):
+    """Collapse maximal runs of compatible fused layers into group phases
+    of at most ``group_size`` members (greedy chunking; a leftover run of
+    one stays a plain per-layer phase, so every source layer is covered
+    exactly once and re-grouping is a no-op)."""
+    out = []
+    i = 0
+    while i < len(phases):
+        p = phases[i]
+        gkind = GROUPABLE_KINDS.get(p.kind)
+        if gkind is None:
+            out.append(p)
+            i += 1
+            continue
+        run = [p]
+        while (i + len(run) < len(phases) and len(run) < group_size
+               and _groupable(p, phases[i + len(run)])):
+            run.append(phases[i + len(run)])
+        if len(run) == 1:
+            out.append(p)
+        else:
+            out.append(dataclasses.replace(
+                p, kind=gkind, members=tuple(run),
+                site=f"{run[0].site}..{run[-1].site}"))
+        i += len(run)
+    return out
+
+
+def fuse_schedule(sched: Schedule, *, group_size: int = 1) -> Schedule:
     """Collapse adjacent msa->mlp (and inner_msa->inner_mlp) phases of one
     encoder block into single fused ``layer`` / ``inner_layer`` phases.
 
@@ -219,6 +291,12 @@ def fuse_schedule(sched: Schedule) -> Schedule:
     hand-edited to interleave blocks fall back to per-phase execution.
     The fused phase inherits the msa half's geometry (window/shift/heads),
     which is everything the fused kernel chain needs.
+
+    With ``group_size > 1`` a second sweep collapses runs of compatible
+    fused layers (same stage and geometry — see `_groupable`) into
+    ``layer_group`` / ``inner_layer_group`` megakernel phases of at most
+    ``group_size`` members each.  ``group_size <= 1`` returns exactly the
+    per-layer fused schedule, and the pass is idempotent at any size.
     """
     fused = []
     i = 0
@@ -234,6 +312,8 @@ def fuse_schedule(sched: Schedule) -> Schedule:
         else:
             fused.append(p)
             i += 1
+    if group_size > 1:
+        fused = _group_layers(fused, group_size)
     return dataclasses.replace(sched, phases=tuple(fused))
 
 
@@ -468,6 +548,95 @@ def _layer_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
     return y.reshape(b, t, c)
 
 
+def _stack_block_params(bps) -> Dict[str, Any]:
+    """Stack per-layer block subtrees into leading-axis (L, ...) operands
+    for the layer-group megakernel.  `QTensor` leaves stack values and
+    per-channel weight scales separately (`quant.stack_qtensors`), so the
+    frozen scales ride the stacked pytree at per-layer granularity."""
+    out: Dict[str, Any] = {}
+    for k in bps[0]:
+        vals = [bp[k] for bp in bps]
+        out[k] = (stack_qtensors(vals) if isinstance(vals[0], QTensor)
+                  else jnp.stack(vals))
+    return out
+
+
+def _group_head_scale(wq: QTensor) -> jax.Array:
+    """Stacked per-(layer, head, out-channel) scale (L, H, 1, Dh) -> the
+    (L, H, Dh) grouped-kernel form."""
+    l, h, _, dh = wq.values.shape
+    return wq.scale.reshape(l, h, dh)
+
+
+def _grouped_layer_call(ph: Phase, sp: Dict[str, Any], xw: jax.Array, obs,
+                        quantized: bool, backend: Optional[str],
+                        bias: Optional[jax.Array],
+                        mask: Optional[jax.Array]) -> jax.Array:
+    """One layer-group megakernel call over (B', N, C): ``sp`` holds the
+    group's stacked (L, ...) weight operands; B' is images, or
+    images * windows in W-MSA mode (the fold happens in the caller)."""
+    if quantized:
+        # (L, 4) frozen activation scales: each member's four calibration
+        # sites, recorded by the (always unfused) calibration pass.
+        act_scales = jnp.stack([
+            jnp.stack([obs.observe(f"{m.site}.qkv_in", xw),
+                       obs.observe(f"{m.site}.w_msa", xw),
+                       obs.observe(f"{m.site}.w_up", xw),
+                       obs.observe(f"{m.site}.w_down", xw)]).reshape(4)
+            for m in ph.members])
+        return ops.vita_layer_group_int8(
+            xw, sp["wq"].values, sp["wk"].values, sp["wv"].values,
+            sp["w_msa"].values, sp["w_up"].values, sp["w_down"].values,
+            act_scales, _group_head_scale(sp["wq"]),
+            _group_head_scale(sp["wk"]), _group_head_scale(sp["wv"]),
+            sp["w_msa"].scale, sp["w_up"].scale, sp["w_down"].scale,
+            sp["ln1_w"], sp["ln1_b"], sp["ln2_w"], sp["ln2_b"],
+            sp["b_up"], sp["b_down"], bias, mask,
+            backend=backend).astype(xw.dtype)
+    return ops.vita_layer_group(
+        xw, sp["wq"], sp["wk"], sp["wv"], sp["w_msa"], sp["ln1_w"],
+        sp["ln1_b"], sp["ln2_w"], sp["ln2_b"], sp["w_up"], sp["b_up"],
+        sp["w_down"], sp["b_down"], bias, mask, backend=backend)
+
+
+def _layer_group_phase(ph: Phase, params: Any, x: jax.Array, obs,
+                       quantized: bool, backend: Optional[str]) -> jax.Array:
+    """Layer-group megakernel phase: L encoder blocks, one kernel chain.
+
+    int8 calibration (observer not yet frozen) falls back to per-member
+    `_layer_phase` calls (which themselves fall back unfused) so the
+    observer sees every member's activation sites.  The window fold
+    happens ONCE for the whole group — members share window/shift by the
+    grouping pass's compatibility rule — so grouping commutes with the
+    fold exactly as per-layer fusion does.
+    """
+    if quantized and (obs is None or obs.frozen is None):
+        for m in ph.members:
+            x = _layer_phase(m, _subtree(params, m.path), x, obs,
+                             quantized, backend)
+        return x
+    sp = _stack_block_params([_subtree(params, m.path)
+                              for m in ph.members])
+    b, t, c = x.shape
+    if not ph.window:
+        return _grouped_layer_call(ph, sp, x, obs, quantized, backend,
+                                   None, None)
+    gh, gw = ph.grid
+    xs = x.reshape(b, gh, gw, c)
+    if ph.shift:
+        xs = jnp.roll(xs, (-ph.shift, -ph.shift), axis=(1, 2))
+    xw = window_partition(xs, ph.window)                # (B*nW, n, C)
+    idx = jnp.asarray(rel_pos_index(ph.window))
+    bias = sp["rel_bias"][:, idx].transpose(0, 3, 1, 2)  # (L, H, n, n)
+    mask = jnp.asarray(shifted_window_mask(gh, gw, ph.window, ph.shift))
+    yw = _grouped_layer_call(ph, sp, xw, obs, quantized, backend,
+                             bias, mask)
+    y = window_reverse(yw, ph.window, gh, gw)
+    if ph.shift:
+        y = jnp.roll(y, (ph.shift, ph.shift), axis=(1, 2))
+    return y.reshape(b, t, c)
+
+
 def _fold_phase(ph: Phase, bp: Any, x: jax.Array, inner: jax.Array,
                 obs) -> jax.Array:
     """TNT re-entry: LN over each patch's flattened pixel tokens -> linear
@@ -536,6 +705,14 @@ def _apply_phase(sched: Schedule, ph: Phase, params: Any,
         # kernel chain (batch axis = images x patches).
         inner = _layer_phase(ph, _subtree(params, ph.path), inner, obs,
                              quantized, sched.backend)
+    elif ph.kind == "layer_group":
+        # Megakernel: members carry their own param paths, so the group
+        # phase receives the WHOLE tree and stacks the member subtrees.
+        x = _layer_group_phase(ph, params, x, obs, quantized,
+                               sched.backend)
+    elif ph.kind == "inner_layer_group":
+        inner = _layer_group_phase(ph, params, inner, obs, quantized,
+                                   sched.backend)
     elif ph.kind == "inner_msa":
         # The pixel stream's batch axis already carries images x
         # patches, so the SAME phase executors (and the same
@@ -639,22 +816,30 @@ class FusionPolicy:
     the CPU-interpreter backend *losing* on several configurations — a
     gap nothing used to act on.  Modes:
 
-      * ``always`` — the pre-policy default: serve the fused schedule;
+      * ``always`` — the pre-policy default: serve the fused schedule
+        (grouped at ``default_group`` when a group size is configured);
       * ``never``  — the ``--no-fuse`` A/B twin: per-phase execution;
       * ``auto``   — consult measured A/B data (``measurements`` maps
-        ``(model, mode, batch) -> fusion_speedup``, seeded from a
-        ``BENCH_vision_serve.json`` via `from_bench`): fuse iff the
-        measured speedup is >= ``threshold``.  An exact-batch miss falls
-        back to the nearest measured batch of the same (model, mode); a
-        total miss falls back to ``default_fused`` (the model's
-        prediction — fuse).
+        ``(model, mode, batch) -> fusion_speedup`` of the per-layer fused
+        chain; ``group_measurements`` maps the same key to
+        ``(fusion_speedup, group_size)`` of the layer-group chain — both
+        seeded from a ``BENCH_vision_serve.json`` via `from_bench`): the
+        policy picks whichever of {unfused, per-layer fused, grouped}
+        measured fastest, fusing iff the winner's speedup is >=
+        ``threshold``.  An exact-batch miss falls back to the nearest
+        measured batch of the same (model, mode); a total miss falls back
+        to ``default_fused`` (the model's prediction — fuse) at
+        ``default_group``.
     """
 
     mode: str = "always"
     measurements: Dict[Tuple[str, str, int], float] = \
         dataclasses.field(default_factory=dict)
+    group_measurements: Dict[Tuple[str, str, int], Tuple[float, int]] = \
+        dataclasses.field(default_factory=dict)
     threshold: float = 1.0
     default_fused: bool = True
+    default_group: int = 1
 
     MODES = ("always", "never", "auto")
 
@@ -677,31 +862,71 @@ class FusionPolicy:
             with open(record) as f:
                 record = json.load(f)
         meas: Dict[Tuple[str, str, int], float] = {}
+        grp: Dict[Tuple[str, str, int], Tuple[float, int]] = {}
         for r in record.get("runs", []):
             fs = r.get("fusion_speedup")
-            if r.get("fused") and isinstance(fs, (int, float)):
-                meas[(r["model"], r["mode"], int(r["batch"]))] = float(fs)
-        return cls(mode=mode, measurements=meas, **kw)
+            if not (r.get("fused") and isinstance(fs, (int, float))):
+                continue
+            key = (r["model"], r["mode"], int(r["batch"]))
+            gs = int(r.get("group_size", 1))
+            if gs > 1:
+                grp[key] = (float(fs), gs)
+            else:
+                meas[key] = float(fs)
+        return cls(mode=mode, measurements=meas, group_measurements=grp,
+                   **kw)
+
+    @staticmethod
+    def _nearest(table, model: str, mode: str, batch: int):
+        """Exact-key lookup, falling back to the nearest measured batch
+        of the same (model, mode); None on a total miss."""
+        key = (model, mode, int(batch))
+        if key in table:
+            return table[key]
+        near = [(abs(b - batch), b) for (m, md, b) in table
+                if m == model and md == mode]
+        if near:
+            return table[(model, mode, min(near)[1])]
+        return None
 
     def decide(self, model: str, mode: str, batch: int) -> bool:
-        """Fused or not for one served configuration."""
+        """Fused (per-layer OR grouped) vs unfused for one configuration."""
         if self.mode == "always":
             return True
         if self.mode == "never":
             return False
-        key = (model, mode, int(batch))
-        if key in self.measurements:
-            return self.measurements[key] >= self.threshold
-        near = [(abs(b - batch), b) for (m, md, b) in self.measurements
-                if m == model and md == mode]
-        if near:
-            b = min(near)[1]
-            return self.measurements[(model, mode, b)] >= self.threshold
-        return self.default_fused
+        s1 = self._nearest(self.measurements, model, mode, batch)
+        sg = self._nearest(self.group_measurements, model, mode, batch)
+        cands = [s for s in (s1, sg[0] if sg else None) if s is not None]
+        if not cands:
+            return self.default_fused
+        return max(cands) >= self.threshold
+
+    def decide_group(self, model: str, mode: str, batch: int) -> int:
+        """Group size of the fused variant `decide` picked (1 = the
+        per-layer chain).  Only meaningful when `decide` returns True."""
+        if self.mode == "never":
+            return 1
+        if self.mode == "always":
+            return self.default_group
+        sg = self._nearest(self.group_measurements, model, mode, batch)
+        if sg is None:
+            return self.default_group if \
+                self._nearest(self.measurements, model, mode, batch) \
+                is None else 1
+        s1 = self._nearest(self.measurements, model, mode, batch)
+        spd, gs = sg
+        if spd >= self.threshold and (s1 is None or spd >= s1):
+            return gs
+        return 1
 
     def decisions(self, model: str, mode: str,
                   batches: Sequence[int]) -> Dict[int, bool]:
         return {int(b): self.decide(model, mode, b) for b in batches}
+
+    def group_decisions(self, model: str, mode: str,
+                        batches: Sequence[int]) -> Dict[int, int]:
+        return {int(b): self.decide_group(model, mode, b) for b in batches}
 
 
 # ---------------------------------------------------------------------------

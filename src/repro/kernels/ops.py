@@ -26,6 +26,9 @@ from .int8_matmul import int8_matmul as _int8_pallas
 from .rglru_scan import rglru_scan as _rglru_pallas
 from .vita_layer import vita_layer as _vita_layer_pallas
 from .vita_layer import vita_layer_int8 as _vita_layer_int8_pallas
+from .vita_layer import vita_layer_group as _vita_layer_group_pallas
+from .vita_layer import (vita_layer_group_int8
+                         as _vita_layer_group_int8_pallas)
 from .vita_msa import vita_msa as _vita_msa_pallas
 from .vita_msa import vita_msa_batched as _vita_msa_batched_pallas
 from .vita_msa import vita_msa_int8 as _vita_msa_int8_pallas
@@ -195,6 +198,43 @@ def vita_layer_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
             wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down,
             bias, mask)
     return _vita_layer_int8_pallas(
+        x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
+        wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale, wdown_scale,
+        ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down, bias, mask,
+        interpret=_interp())
+
+
+def vita_layer_group(x, wq, wk, wv, w_msa, ln1_w, ln1_b, ln2_w, ln2_b,
+                     w_up, b_up, w_down, b_down, bias=None, mask=None, *,
+                     backend: Optional[str] = None):
+    """A layer group (L fused encoder layers, stacked leading-axis
+    operands) as ONE kernel chain: (B, N, D) -> (B, N, D).  The pallas
+    path runs the (B, L, H)-grid megakernel with the activation carried
+    in VMEM across layers; the xla oracle replays the per-layer fused
+    oracle, so grouped == per-layer fused by construction there."""
+    if get_backend(backend) == "xla":
+        return ref.vita_layer_group_ref(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
+                                        ln2_w, ln2_b, w_up, b_up, w_down,
+                                        b_down, bias, mask)
+    return _vita_layer_group_pallas(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
+                                    ln2_w, ln2_b, w_up, b_up, w_down,
+                                    b_down, bias, mask, interpret=_interp())
+
+
+def vita_layer_group_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
+                          act_scales, wq_scale, wk_scale, wv_scale,
+                          wmsa_scale, wup_scale, wdown_scale, ln1_w, ln1_b,
+                          ln2_w, ln2_b, b_up, b_down, bias=None, mask=None,
+                          *, backend: Optional[str] = None):
+    """int8 layer group: the megakernel with each member's frozen requant
+    chain ((L, 4) ``act_scales``, per-layer stacked weight scales)."""
+    if get_backend(backend) == "xla":
+        return ref.vita_layer_group_int8_ref(
+            x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
+            wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale,
+            wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down,
+            bias, mask)
+    return _vita_layer_group_int8_pallas(
         x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
         wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale, wdown_scale,
         ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down, bias, mask,

@@ -330,6 +330,59 @@ def vita_layer_int8_ref(x: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
         + b_down.astype(jnp.float32)
 
 
+def vita_layer_group_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
+                         wv: jax.Array, w_msa: jax.Array, ln1_w: jax.Array,
+                         ln1_b: jax.Array, ln2_w: jax.Array,
+                         ln2_b: jax.Array, w_up: jax.Array, b_up: jax.Array,
+                         w_down: jax.Array, b_down: jax.Array,
+                         bias: Optional[jax.Array] = None,
+                         mask: Optional[jax.Array] = None) -> jax.Array:
+    """Layer-group oracle: L stacked encoder layers through the per-layer
+    fused oracle, layer by layer — exactly the per-layer fused math, so
+    grouped == per-layer fused by construction on this backend.
+
+    Every weight operand carries the layer as its leading axis (wq/wk/wv:
+    (L, H, D, Dh); w_msa: (L, D, D); LN vectors (L, D); w_up (L, D, M);
+    bias (L, H, n, n)).  ``mask`` is shared: members of one group have a
+    single window/shift by the grouping pass's compatibility rule.
+    """
+    y = x
+    for l in range(wq.shape[0]):
+        y = vita_layer_ref(y, wq[l], wk[l], wv[l], w_msa[l], ln1_w[l],
+                           ln1_b[l], ln2_w[l], ln2_b[l], w_up[l], b_up[l],
+                           w_down[l], b_down[l],
+                           None if bias is None else bias[l], mask)
+    return y
+
+
+def vita_layer_group_int8_ref(x: jax.Array, wq_q: jax.Array,
+                              wk_q: jax.Array, wv_q: jax.Array,
+                              wmsa_q: jax.Array, wup_q: jax.Array,
+                              wdown_q: jax.Array, act_scales: jax.Array,
+                              wq_scale: jax.Array, wk_scale: jax.Array,
+                              wv_scale: jax.Array, wmsa_scale: jax.Array,
+                              wup_scale: jax.Array, wdown_scale: jax.Array,
+                              ln1_w: jax.Array, ln1_b: jax.Array,
+                              ln2_w: jax.Array, ln2_b: jax.Array,
+                              b_up: jax.Array, b_down: jax.Array,
+                              bias: Optional[jax.Array] = None,
+                              mask: Optional[jax.Array] = None) -> jax.Array:
+    """int8 layer-group oracle: the per-layer int8 requant chain replayed
+    over the stacked operands — each member requantizes at ITS frozen
+    per-site scales (``act_scales`` is (L, 4), weight scales stack on the
+    layer axis), so grouped int8 == per-layer fused int8 == unfused int8
+    bit-exact."""
+    y = x.astype(jnp.float32)
+    for l in range(wq_q.shape[0]):
+        y = vita_layer_int8_ref(
+            y, wq_q[l], wk_q[l], wv_q[l], wmsa_q[l], wup_q[l], wdown_q[l],
+            act_scales[l], wq_scale[l], wk_scale[l], wv_scale[l],
+            wmsa_scale[l], wup_scale[l], wdown_scale[l], ln1_w[l],
+            ln1_b[l], ln2_w[l], ln2_b[l], b_up[l], b_down[l],
+            None if bias is None else bias[l], mask)
+    return y
+
+
 # ---------------------------------------------------------------------------
 # int8 matmul — oracle
 # ---------------------------------------------------------------------------

@@ -30,7 +30,11 @@ Fusion is policy-driven per batch bucket: ``--fusion-policy
 {always,never,auto}`` (`core.schedule.FusionPolicy`), where ``auto``
 consults the measured fused-vs-unfused A/B data in ``--fusion-data`` (the
 bench JSON) and fuses only where measurement says it wins; ``--no-fuse``
-is shorthand for ``never``.  ``--profile`` runs the per-phase HUE
+is shorthand for ``never``.  ``--fuse-group-size N`` additionally
+collapses runs of up to N fused layers into one ``layer_group``
+megakernel phase (cross-layer weight streaming; under ``auto`` the
+grouped variant competes against per-layer fused and unfused on the
+measured data).  ``--profile`` runs the per-phase HUE
 profiler after each mode's drain (`VisionServer.profile_stats`,
 docs/PROFILING.md) and prints the measured-vs-modelled table.
 
@@ -155,24 +159,30 @@ class VisionServer:
         if fusion_policy is None:
             self._bucket_fused = {b: bool(getattr(cfg, "fused", True))
                                   for b in self.buckets}
+            self._bucket_group = {b: int(getattr(cfg, "fuse_group", 1))
+                                  for b in self.buckets}
         else:
             self._bucket_fused = fusion_policy.decisions(
+                self.model_name, mode, self.buckets)
+            self._bucket_group = fusion_policy.group_decisions(
                 self.model_name, mode, self.buckets)
         self.queue: List[VisionRequest] = []
         self.done: List[VisionRequest] = []
         self.n_batches = 0
         self.n_padded = 0
         self._rid = 0
-        self._forwards: Dict[bool, callable] = {}
+        self._forwards: Dict[Tuple[bool, int], callable] = {}
 
-    def _forward_for(self, fused: bool):
-        """The jitted batched forward for one fusion variant (built
-        lazily — a policy that never flips serves exactly one).  jit's
-        own shape-keyed cache gives one compiled program per bucket."""
-        fn = self._forwards.get(fused)
+    def _forward_for(self, fused: bool, group: int = 1):
+        """The jitted batched forward for one (fusion, group-size) variant
+        (built lazily — a policy that never flips serves exactly one).
+        jit's own shape-keyed cache gives one compiled program per
+        bucket."""
+        group = int(group) if fused else 1
+        fn = self._forwards.get((fused, group))
         if fn is not None:
             return fn
-        cfg = dataclasses.replace(self.cfg, fused=fused)
+        cfg = dataclasses.replace(self.cfg, fused=fused, fuse_group=group)
         model_fwd = vision_registry.forward_fn(cfg)
         # Patchify INSIDE the compiled program: the host-side drain then
         # dispatches exactly one XLA call per micro-batch (the reshape
@@ -190,7 +200,7 @@ class VisionServer:
                 return model_fwd(p, vit.extract_patches(images, cfg.patch),
                                  cfg)
         fn = jax.jit(_fwd)
-        self._forwards[fused] = fn
+        self._forwards[(fused, group)] = fn
         return fn
 
     # -- request plane ----------------------------------------------------
@@ -233,7 +243,8 @@ class VisionServer:
             batch_in = shd.shard_vision_batch(images, self.mesh)
         else:
             batch_in = jnp.asarray(images)
-        forward = self._forward_for(self._bucket_fused[bucket])
+        forward = self._forward_for(self._bucket_fused[bucket],
+                                    self._bucket_group[bucket])
         logits = np.asarray(jax.block_until_ready(forward(batch_in)))
         t = time.perf_counter()
         for i, req in enumerate(batch):
@@ -266,7 +277,14 @@ class VisionServer:
                                                bucket)
                      if self.fusion_policy
                      else bool(getattr(self.cfg, "fused", True)))
-        cfg = dataclasses.replace(self.cfg, fused=fused)
+        group = self._bucket_group.get(bucket)
+        if group is None:
+            group = (self.fusion_policy.decide_group(
+                self.model_name, self.mode, bucket)
+                if self.fusion_policy
+                else int(getattr(self.cfg, "fuse_group", 1)))
+        group = group if fused else 1
+        cfg = dataclasses.replace(self.cfg, fused=fused, fuse_group=group)
         sched = vision_registry.make_schedule(cfg)
         params = self.qparams if self.mode == "int8" else self.params
         obs = self.calibrator if self.mode == "int8" else None
@@ -276,10 +294,11 @@ class VisionServer:
             sched, params, patches, observer=obs,
             warmup=warmup, repeats=repeats)
         report = hue_lib.live_hue_report(
-            vision_registry.make_spec(cfg), records, fused=fused)
+            vision_registry.make_spec(cfg), records, fused=fused,
+            group_size=group)
         report.update({"model": self.model_name, "config": cfg.name,
                        "mode": self.mode, "batch": bucket, "fused": fused,
-                       "devices": self.dp})
+                       "group_size": group, "devices": self.dp})
         return report
 
     def restamp_queued(self) -> None:
@@ -314,6 +333,9 @@ class VisionServer:
             "fused_buckets": {str(b): bool(f)
                               for b, f in sorted(
                                   self._bucket_fused.items())},
+            "group_buckets": {str(b): int(g)
+                              for b, g in sorted(
+                                  self._bucket_group.items())},
             "batches": self.n_batches - batches0,
             "padded": self.n_padded - padded0,
             "wall_s": dt,
@@ -405,7 +427,8 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
               f"({stats['batches']} batches, {stats['padded']} padded)")
         if fusion_policy is not None:
             print(f"[vision-serve] fusion policy {fusion_policy.mode}: "
-                  f"fused buckets {stats['fused_buckets']}")
+                  f"fused buckets {stats['fused_buckets']} "
+                  f"group sizes {stats['group_buckets']}")
         if profile:
             report = server.profile_stats()
             stats["hue_profile"] = report
@@ -451,6 +474,12 @@ def main(argv=None):
                                          "BENCH_vision_serve.json"),
                     help="bench JSON seeding the 'auto' policy's measured "
                          "(model, mode, batch) -> fusion_speedup table")
+    ap.add_argument("--fuse-group-size", type=int, default=1,
+                    help="layer-group megakernel size: collapse runs of "
+                         "up to this many fused layers into one "
+                         "layer_group pallas_call (1 = per-layer fused "
+                         "chain; groups form only where the schedule "
+                         "allows — see docs/MODELS.md)")
     ap.add_argument("--profile", action="store_true",
                     help="after each mode's drain, run the per-phase HUE "
                          "profiler and print the measured-vs-modelled "
@@ -480,20 +509,26 @@ def main(argv=None):
         raise SystemExit("[vision-serve] --no-fuse and --fusion-policy "
                          "conflict; --no-fuse is shorthand for "
                          "--fusion-policy never")
+    if args.fuse_group_size < 1:
+        raise SystemExit("[vision-serve] --fuse-group-size must be >= 1")
     policy = None
     if args.fusion_policy == "auto":
         if os.path.exists(args.fusion_data):
-            policy = FusionPolicy.from_bench(args.fusion_data)
+            policy = FusionPolicy.from_bench(
+                args.fusion_data, default_group=args.fuse_group_size)
         else:
             print(f"[vision-serve] WARNING: --fusion-data "
                   f"{args.fusion_data} not found; 'auto' falls back to "
                   f"the modelled default (fuse)")
-            policy = FusionPolicy(mode="auto")
+            policy = FusionPolicy(mode="auto",
+                                  default_group=args.fuse_group_size)
     elif args.fusion_policy:
-        policy = FusionPolicy(mode=args.fusion_policy)
+        policy = FusionPolicy(mode=args.fusion_policy,
+                              default_group=args.fuse_group_size)
     cfg = vision_registry.build_cfg(args.model, full=args.full,
                                     backend=args.backend,
-                                    fused=not args.no_fuse)
+                                    fused=not args.no_fuse,
+                                    fuse_group=args.fuse_group_size)
     modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
                             modes=modes, seed=args.seed, name=args.model,

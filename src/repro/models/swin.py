@@ -54,6 +54,8 @@ class SwinConfig:
     backend: Optional[str] = None
     dtype: str = "float32"
     fused: bool = True             # fuse msa+mlp pairs into layer phases
+    fuse_group: int = 1            # >1: group runs of fused layers into
+                                   # layer_group megakernel phases
 
     @property
     def patch_dim(self) -> int:
@@ -164,7 +166,8 @@ def to_spec(cfg: SwinConfig) -> VisionModelSpec:
 def schedule(cfg: SwinConfig) -> sched_lib.Schedule:
     s = sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
                                    backend=cfg.backend, hierarchical=True)
-    return sched_lib.fuse_schedule(s) if cfg.fused else s
+    return sched_lib.fuse_schedule(s, group_size=cfg.fuse_group) \
+        if cfg.fused else s
 
 
 def forward(params: Params, patches: jax.Array, cfg: SwinConfig,

@@ -63,6 +63,9 @@ class TNTConfig:
     backend: Optional[str] = None
     dtype: str = "float32"
     fused: bool = True             # fuse (inner_)msa+mlp pairs into layers
+    fuse_group: int = 1            # >1: group runs of fused layers (a
+                                   # no-op for TNT — fold re-entry
+                                   # interleaves, layers never adjacent)
 
     @property
     def tokens(self) -> int:
@@ -209,7 +212,8 @@ def to_spec(cfg: TNTConfig) -> VisionModelSpec:
 def schedule(cfg: TNTConfig) -> sched_lib.Schedule:
     s = sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
                                    backend=cfg.backend, hierarchical=False)
-    return sched_lib.fuse_schedule(s) if cfg.fused else s
+    return sched_lib.fuse_schedule(s, group_size=cfg.fuse_group) \
+        if cfg.fused else s
 
 
 def forward(params: Params, patches: jax.Array, cfg: TNTConfig,

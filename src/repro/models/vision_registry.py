@@ -92,13 +92,16 @@ def get(name: str) -> VisionModel:
 
 def build_cfg(name: str, *, full: bool = False,
               backend: Optional[str] = None,
-              fused: Optional[bool] = None) -> Any:
+              fused: Optional[bool] = None,
+              fuse_group: Optional[int] = None) -> Any:
     entry = get(name)
     cfg = (entry.full if full else entry.reduced)()
     if backend is not None:
         cfg = dataclasses.replace(cfg, backend=backend)
     if fused is not None:
         cfg = dataclasses.replace(cfg, fused=fused)
+    if fuse_group is not None:
+        cfg = dataclasses.replace(cfg, fuse_group=int(fuse_group))
     return cfg
 
 

@@ -46,6 +46,8 @@ class ViTConfig:
     backend: Optional[str] = None
     dtype: str = "float32"
     fused: bool = True             # fuse msa+mlp pairs into layer phases
+    fuse_group: int = 1            # >1: group runs of fused layers into
+                                   # layer_group megakernel phases
 
     @property
     def tokens(self) -> int:
@@ -146,10 +148,13 @@ def schedule(cfg: ViTConfig) -> sched_lib.Schedule:
     """Compile the config into the phase schedule `forward` replays.
 
     With ``cfg.fused`` (the default) the msa+mlp pair of every encoder
-    block collapses into one fused ``layer`` phase (`fuse_schedule`)."""
+    block collapses into one fused ``layer`` phase (`fuse_schedule`);
+    ``cfg.fuse_group > 1`` further collapses runs of fused layers into
+    ``layer_group`` megakernel phases."""
     s = sched_lib.compile_schedule(to_spec(cfg), n_classes=cfg.n_classes,
                                    backend=cfg.backend, hierarchical=False)
-    return sched_lib.fuse_schedule(s) if cfg.fused else s
+    return sched_lib.fuse_schedule(s, group_size=cfg.fuse_group) \
+        if cfg.fused else s
 
 
 def forward(params: Params, patches: jax.Array, cfg: ViTConfig,

@@ -1,7 +1,7 @@
 """tools/compare_bench.py exit-code contract: regressions beyond
 ``--max-regression`` exit 3 (CI warns, non-blocking), tool crashes exit 2
 (CI fails — no more ``|| true`` swallowing both), clean compares exit 0;
-rows join on (model, mode, batch, fused, devices)."""
+rows join on (model, mode, batch, fused, group_size, devices)."""
 
 import json
 import os
@@ -75,6 +75,39 @@ def test_rows_join_on_devices(tmp_path):
     assert rc == 0, out              # the 10 img/s row joined nothing
     assert "1 joined rows" in out
     assert "only in candidate" in out
+
+
+def test_rows_join_on_group_size(tmp_path):
+    """A layer-group megakernel row (group_size=4) must not be compared
+    against the per-layer fused row of the same cell; pre-grouping files
+    (no group_size field) join as group_size=1."""
+    legacy = dict(_row(thr=100.0))           # pre-grouping: no group_size
+    base = _write(tmp_path, "base.json", [legacy])
+    grouped = dict(_row(thr=10.0))
+    grouped["group_size"] = 4
+    perlayer = dict(_row(thr=100.0))
+    perlayer["group_size"] = 1
+    cand = _write(tmp_path, "cand.json", [grouped, perlayer])
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 0, out                # the grouped row joined nothing
+    assert "1 joined rows" in out
+    assert "only in candidate" in out
+
+
+def test_grouped_rows_join_and_gate(tmp_path):
+    """Grouped rows with matching group_size on both sides join normally
+    and participate in the regression gate like any other row."""
+    g = dict(_row(thr=100.0))
+    g["group_size"] = 4
+    base = _write(tmp_path, "base.json", [g])
+    g2 = dict(g)
+    g2["throughput_img_s"] = 50.0
+    cand = _write(tmp_path, "cand.json", [g2])
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 3, out
+    assert "grp" in out                # the group_size display column
+    rc, _ = _run(base, cand)
+    assert rc == 0
 
 
 def test_fusion_speedup_diff_column(tmp_path):

@@ -52,6 +52,29 @@ BENCH_FIXTURE = {"bench": "vision_serve", "runs": [
      "devices": 8},                       # sharded: no fusion_speedup key
 ]}
 
+# The post-megakernel schema: grouped rows carry group_size > 1 and their
+# own fusion_speedup (vs the same unfused twin).
+GROUPED_BENCH_FIXTURE = {"bench": "vision_serve", "runs": [
+    {"model": "m", "mode": "float", "batch": 1, "fused": False,
+     "devices": 1},
+    {"model": "m", "mode": "float", "batch": 1, "fused": True,
+     "group_size": 1, "devices": 1, "fusion_speedup": 1.10},
+    {"model": "m", "mode": "float", "batch": 1, "fused": True,
+     "group_size": 4, "devices": 1, "fusion_speedup": 1.30,
+     "speedup_vs_fused": 1.18},
+    # grouped loses to per-layer fused here:
+    {"model": "m", "mode": "int8", "batch": 4, "fused": True,
+     "group_size": 1, "devices": 1, "fusion_speedup": 1.05},
+    {"model": "m", "mode": "int8", "batch": 4, "fused": True,
+     "group_size": 4, "devices": 1, "fusion_speedup": 0.90,
+     "speedup_vs_fused": 0.857},
+    # BOTH fused variants lose -> serve unfused:
+    {"model": "m", "mode": "int8", "batch": 1, "fused": True,
+     "group_size": 1, "devices": 1, "fusion_speedup": 0.95},
+    {"model": "m", "mode": "int8", "batch": 1, "fused": True,
+     "group_size": 4, "devices": 1, "fusion_speedup": 0.97},
+]}
+
 
 # ---------------------------------------------------------------------------
 # profile_schedule — the measurement primitive
@@ -150,6 +173,47 @@ def test_fusion_regressions_scans_fused_rows_only():
     assert hue_lib.fusion_regressions({"runs": []}) == []
 
 
+def test_live_hue_report_grouped_kinds_and_launch_account(tiny_setup):
+    """At group_size > 1 the attribution moves under the ``layer_group``
+    key (matching a grouped schedule's measured kinds), totals are
+    conserved against the ungrouped report, and the total row prices the
+    launch windows grouping reclaims."""
+    import dataclasses
+    cfg, params, images = tiny_setup
+    gcfg = dataclasses.replace(cfg, fuse_group=2)
+    sched = vit.schedule(gcfg)
+    assert "layer_group" in sched.counts()
+    patches = vit.extract_patches(images, cfg.patch)
+    _, records = sched_lib.profile_schedule(sched, params, patches,
+                                            warmup=1, repeats=1)
+    spec = vit.to_spec(cfg)
+    report = hue_lib.live_hue_report(spec, records, fused=True,
+                                     group_size=2)
+    rows = {r["phase"]: r for r in report["rows"]}
+    # both layers grouped -> layer_group priced, no plain layer row
+    assert "layer_group" in rows and "layer" not in rows
+    assert rows["layer_group"]["modelled_cycles"] > 0
+    assert rows["layer_group"]["hue_modelled"] > 0
+    base = hue_lib.live_hue_report(spec, records, fused=True)
+    assert abs(report["total"]["modelled_cycles"]
+               - base["total"]["modelled_cycles"]) < 1e-6
+    assert report["total"]["group_size"] == 2
+    assert report["total"]["launch_cycles_reclaimed"] == pytest.approx(
+        pm.total_launch_cycles(spec, group_size=1)
+        - pm.total_launch_cycles(spec, group_size=2))
+    assert report["total"]["launch_cycles_reclaimed"] > 0
+    assert base["total"]["launch_cycles_reclaimed"] == 0.0
+    text = hue_lib.render_hue_table(report, title="grouped")
+    assert "layer_group" in text and "launch_cycles_reclaimed" in text
+
+
+def test_fusion_regressions_tolerates_grouped_rows():
+    regs = hue_lib.fusion_regressions(GROUPED_BENCH_FIXTURE)
+    assert [(r["mode"], r["batch"], r["group_size"]) for r in regs] == \
+        [("int8", 4, 4), ("int8", 1, 1), ("int8", 1, 4)]
+    assert all(r["fusion_speedup"] < 1.0 for r in regs)
+
+
 # ---------------------------------------------------------------------------
 # FusionPolicy — measurement-driven fuse/don't-fuse
 # ---------------------------------------------------------------------------
@@ -184,6 +248,56 @@ def test_fusion_policy_from_bench_path_and_threshold(tmp_path):
     path.write_text(json.dumps(BENCH_FIXTURE))
     policy = FusionPolicy.from_bench(str(path), threshold=1.3)
     assert policy.decide("m", "float", 1) is False      # 1.21 < 1.3
+
+
+def test_fusion_policy_three_way_from_grouped_bench():
+    """`auto` picks among {unfused, per-layer fused, grouped} from the
+    measured data: grouped rows seed `group_measurements` and
+    `decide_group` returns the winning group size."""
+    policy = FusionPolicy.from_bench(GROUPED_BENCH_FIXTURE)
+    assert policy.measurements[("m", "float", 1)] == 1.10
+    assert policy.group_measurements[("m", "float", 1)] == (1.30, 4)
+    # grouped wins outright
+    assert policy.decide("m", "float", 1) is True
+    assert policy.decide_group("m", "float", 1) == 4
+    # per-layer fused wins, grouped loses -> fuse at group size 1
+    assert policy.decide("m", "int8", 4) is True
+    assert policy.decide_group("m", "int8", 4) == 1
+    # both fused variants measured losses -> serve unfused
+    assert policy.decide("m", "int8", 1) is False
+    assert policy.group_decisions("m", "float", (1,)) == {1: 4}
+    # static modes: 'always' serves default_group, 'never' serves 1
+    assert FusionPolicy(mode="always",
+                        default_group=4).decide_group("m", "x", 1) == 4
+    assert FusionPolicy(mode="never",
+                        default_group=4).decide_group("m", "x", 1) == 1
+    # total miss -> the configured default group
+    assert FusionPolicy.from_bench(
+        GROUPED_BENCH_FIXTURE,
+        default_group=2).decide_group("unseen", "float", 4) == 2
+
+
+def test_server_group_decisions_per_bucket(tiny_setup):
+    """A policy with grouped measurements steers `_bucket_group`, and the
+    grouped forward serves logits identical to the per-layer one."""
+    cfg, params, images = tiny_setup
+    policy = FusionPolicy.from_bench(GROUPED_BENCH_FIXTURE)
+    server = VisionServer(cfg, params, mode="float", buckets=(1,),
+                          fusion_policy=policy, model_name="m")
+    assert server._bucket_fused == {1: True}
+    assert server._bucket_group == {1: 4}
+    server.submit_many(images)
+    stats = server.run()
+    assert stats["group_buckets"] == {"1": 4}
+    plain = VisionServer(cfg, params, mode="float", buckets=(1,))
+    assert plain._bucket_group == {1: 1}
+    plain.submit_many(images)
+    plain.run()
+    got = sorted(server.done, key=lambda r: r.rid)
+    want = sorted(plain.done, key=lambda r: r.rid)
+    np.testing.assert_array_equal(
+        np.stack([r.logits for r in got]),
+        np.stack([r.logits for r in want]))
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +349,20 @@ def test_profile_stats_schema(tiny_setup):
     assert report["total"]["measured_ms"] > 0
     # profiling must not perturb the serving queue
     assert not server.queue and not server.done
+
+
+def test_profile_stats_grouped_schema(tiny_setup):
+    """profile_stats on a grouped config reports the layer_group rows the
+    grouped schedule actually executes, tagged with group_size."""
+    import dataclasses
+    cfg, params, images = tiny_setup
+    server = VisionServer(dataclasses.replace(cfg, fuse_group=2), params,
+                          mode="float", buckets=(2,), model_name="tiny")
+    report = server.profile_stats(repeats=1)
+    assert report["fused"] is True and report["group_size"] == 2
+    kinds = [r["phase"] for r in report["rows"]]
+    assert kinds == ["embed", "layer_group", "head"]
+    assert report["total"]["launch_cycles_reclaimed"] > 0
 
 
 def test_profile_stats_int8_runs_frozen_path(tiny_setup):

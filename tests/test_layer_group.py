@@ -1,0 +1,186 @@
+"""The layer-grouping pass (`fuse_schedule(..., group_size=N)`).
+
+Property-based (via tests/_hypothesis_compat.py — real `hypothesis` when
+installed, a seeded deterministic sweep otherwise): over random model
+geometries and group sizes the pass must be idempotent, group only
+compatible adjacent layers (never across a Swin merge / shift change or a
+TNT fold), cover every fused layer exactly once, and degenerate to the
+plain fused schedule at group size 1.  Deterministic pins for the four
+registered models' grouped phase counts ride along.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import schedule as sched_lib
+from repro.models import swin, tnt, vision_registry, vit
+from _hypothesis_compat import given, settings, strategies as st
+
+MODELS = vision_registry.list_models()
+
+
+def _vit_sched(layers: int, heads: int, fused: bool = False):
+    cfg = vit.ViTConfig(name=f"prop_l{layers}h{heads}", image=16, patch=8,
+                        dim=8 * heads, heads=heads, layers=layers,
+                        n_classes=4, fused=fused)
+    return vit.schedule(cfg)
+
+
+def _layer_sites(sched):
+    """site -> count over plain layers and group members, per layer kind
+    (the exact-cover accounting: grouping must move sites, never drop or
+    duplicate them)."""
+    out = {}
+    for p in sched.phases:
+        if p.kind in sched_lib.GROUPABLE_KINDS:
+            out.setdefault(p.kind, []).append(p.site)
+        elif p.kind in sched_lib.GROUPABLE_KINDS.values():
+            base = next(k for k, v in sched_lib.GROUPABLE_KINDS.items()
+                        if v == p.kind)
+            out.setdefault(base, []).extend(m.site for m in p.members)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Properties (random geometry x group size)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=10))
+def test_grouping_idempotent(layers, heads, group_size):
+    s = _vit_sched(layers, heads)
+    g = sched_lib.fuse_schedule(s, group_size=group_size)
+    assert sched_lib.fuse_schedule(g, group_size=group_size) == g
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=10))
+def test_grouping_exact_cover(layers, heads, group_size):
+    """Every fused layer appears exactly once — as a plain `layer` phase
+    or as a member of exactly one `layer_group` — and groups respect the
+    size cap."""
+    s = _vit_sched(layers, heads)
+    f = sched_lib.fuse_schedule(s)
+    g = sched_lib.fuse_schedule(s, group_size=group_size)
+    assert _layer_sites(g) == _layer_sites(f)
+    for p in g.phases:
+        if p.kind in sched_lib.GROUPABLE_KINDS.values():
+            assert 2 <= len(p.members) <= group_size
+        elif p.kind in sched_lib.GROUPABLE_KINDS:
+            assert p.members == ()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=4))
+def test_group_size_one_degenerates_to_fused(layers, heads):
+    s = _vit_sched(layers, heads)
+    assert sched_lib.fuse_schedule(s, group_size=1) == \
+        sched_lib.fuse_schedule(s)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=10))
+def test_grouping_members_pairwise_compatible(group_size):
+    """Groups never span a stage boundary: every member of every group
+    phase must be `_groupable` with the group's head (same grid, window,
+    shift, heads, and path prefix) — exercised on the registered models,
+    whose schedules contain every boundary kind (Swin merge + shift
+    alternation, TNT fold re-entry)."""
+    for name in MODELS:
+        cfg = vision_registry.build_cfg(name, fused=False)
+        s = vision_registry.make_schedule(cfg)
+        g = sched_lib.fuse_schedule(s, group_size=group_size)
+        for p in g.phases:
+            if p.kind not in sched_lib.GROUPABLE_KINDS.values():
+                continue
+            head, rest = p.members[0], p.members[1:]
+            assert all(sched_lib._groupable(head, q) for q in rest), \
+                (name, p.site)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic pins (registered models)
+# ---------------------------------------------------------------------------
+
+
+def test_grouped_counts_registered_models():
+    """The grouping structure of each registered model at group size 4:
+    ViT/DeiT collapse their single 4-layer stage into one group; Swin's
+    shifted multi-window stage 0 never groups (adjacent layers differ in
+    shift) while its single-window stage 1 does; TNT never groups (fold
+    re-entry and inner blocks interpose between outer layers)."""
+    def counts(name):
+        return vision_registry.make_schedule(
+            vision_registry.build_cfg(name, fuse_group=4)).counts()
+
+    for name in ("vit_edge", "deit_t"):
+        c = counts(name)
+        assert c.get("layer_group") == 1 and "layer" not in c, (name, c)
+    c = counts("swin_t")
+    assert c.get("layer") == 2 and c.get("layer_group") == 1, c
+    c = counts("tnt_s")
+    assert "layer_group" not in c and "inner_layer_group" not in c, c
+    # and identical to the ungrouped fused schedule for TNT
+    assert vision_registry.make_schedule(
+        vision_registry.build_cfg("tnt_s", fuse_group=4)) == \
+        vision_registry.make_schedule(vision_registry.build_cfg("tnt_s"))
+
+
+def test_group_site_spans_member_range():
+    g = vision_registry.make_schedule(
+        vision_registry.build_cfg("vit_edge", fuse_group=4))
+    grp = [p for p in g.phases if p.kind == "layer_group"]
+    assert len(grp) == 1
+    assert grp[0].site == f"{grp[0].members[0].site}.." \
+                          f"{grp[0].members[-1].site}"
+
+
+def test_partial_chunk_stays_plain_layer():
+    """4 layers at group size 3 -> one group of 3 + one PLAIN layer (a
+    leftover chunk of one must not become a degenerate group)."""
+    c = vision_registry.make_schedule(
+        vision_registry.build_cfg("vit_edge", fuse_group=3)).counts()
+    assert c.get("layer_group") == 1 and c.get("layer") == 1, c
+
+
+def test_swin_never_groups_across_shift_or_merge():
+    g = vision_registry.make_schedule(
+        vision_registry.build_cfg("swin_t", fuse_group=8))
+    for p in g.phases:
+        if p.kind == "layer_group":
+            shifts = {m.shift for m in p.members}
+            windows = {m.window for m in p.members}
+            prefixes = {m.path[:-1] for m in p.members}
+            assert len(shifts) == len(windows) == len(prefixes) == 1
+
+
+def test_tnt_inner_layers_never_group():
+    """TNT's inner blocks alternate with outer phases and fold re-entry —
+    no adjacent run exists even at an oversized group budget."""
+    cfg = tnt.tnt_edge()
+    g = sched_lib.fuse_schedule(
+        vision_registry.make_schedule(
+            dataclasses.replace(cfg, fused=False)), group_size=16)
+    kinds = {p.kind for p in g.phases}
+    assert "inner_layer_group" not in kinds and "layer_group" not in kinds
+
+
+def test_swin_full_geometry_groups_deep_stage():
+    """Paper-scale Swin-T (depths 2,2,6,2): the 6-layer stage 2 and final
+    stage 3 are single-window at 224px? — verify grouping only ever forms
+    where n_windows == 1 and shifts match, whatever the geometry."""
+    cfg = swin.swin_t()
+    s = vision_registry.make_schedule(dataclasses.replace(cfg, fused=False))
+    g = sched_lib.fuse_schedule(s, group_size=4)
+    f = sched_lib.fuse_schedule(s)
+    assert _layer_sites(g) == _layer_sites(f)
+    for p in g.phases:
+        if p.kind == "layer_group":
+            assert len({m.shift for m in p.members}) == 1

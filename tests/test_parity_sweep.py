@@ -1,0 +1,81 @@
+"""Cross-variant parity sweep: unfused == fused == layer-group megakernel.
+
+ONE parametrized matrix (via the `parity_oracle` conftest fixture) covers
+what previous PRs asserted piecemeal: for every registered model —
+columnar (ViT/DeiT), windowed (Swin), and hierarchical (TNT) — the three
+executor variants agree in float and int8, on a single device and across
+the ``("data",)`` mesh, and the grouped chain agrees with the per-layer
+fused one BIT-EXACT (same per-layer op sequence, one kernel).
+
+The every-push smoke subset runs the full model x mode grid at the default
+group size; the ``slow``-marked full matrix additionally sweeps group
+sizes (including sizes larger than the layer count and sizes that leave a
+partial chunk) and the Pallas interpreter backend — CI runs it on the
+nightly/on-label leg (see .github/workflows/ci.yml).
+"""
+
+import jax
+import pytest
+
+from repro.models import vision_registry
+
+MODELS = vision_registry.list_models()
+NDEV = jax.device_count()
+needs_multi = pytest.mark.skipif(
+    NDEV < 2, reason="needs >=2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mesh(n):
+    from repro.launch.mesh import make_vision_mesh
+    return make_vision_mesh(n)
+
+
+# ---------------------------------------------------------------------------
+# Smoke subset — every push
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["float", "int8"])
+@pytest.mark.parametrize("name", MODELS)
+def test_parity_smoke(name, mode, parity_oracle):
+    parity_oracle(name, mode=mode, group_size=4)
+
+
+@needs_multi
+@pytest.mark.parametrize("mode", ["float", "int8"])
+def test_parity_smoke_mesh(mode, parity_oracle):
+    """One mesh cell per mode on every push (full model grid is slow)."""
+    parity_oracle("deit_t", mode=mode, group_size=4, mesh=_mesh(NDEV))
+
+
+# ---------------------------------------------------------------------------
+# Full matrix — nightly / on-label (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("group_size", [2, 3, 8])
+@pytest.mark.parametrize("mode", ["float", "int8"])
+@pytest.mark.parametrize("name", MODELS)
+def test_parity_full(name, mode, group_size, parity_oracle):
+    """Group sizes that leave a partial chunk (3 over 4 layers) and that
+    exceed every stage's depth (8) must stay exact, not just the even
+    divisor the smoke subset runs."""
+    parity_oracle(name, mode=mode, group_size=group_size)
+
+
+@pytest.mark.slow
+@needs_multi
+@pytest.mark.parametrize("mode", ["float", "int8"])
+@pytest.mark.parametrize("name", MODELS)
+def test_parity_full_mesh(name, mode, parity_oracle):
+    parity_oracle(name, mode=mode, group_size=4, mesh=_mesh(NDEV))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["vit_edge", "swin_t"])
+def test_parity_full_pallas_interpret(name, parity_oracle):
+    """The grouped Pallas megakernel (interpret mode on CPU) against the
+    xla-oracle variants — the kernel itself, not just its ref loop."""
+    parity_oracle(name, mode="float", group_size=4, backend="pallas")

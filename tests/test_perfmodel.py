@@ -183,3 +183,76 @@ def test_total_boundary_cycles_is_the_fusion_delta(name):
     fused = sum(pm.expected_phase_cycles(spec, fused=True).values())
     assert boundary > 0
     assert abs((unfused - fused) - boundary) < 1e-6 * unfused
+
+
+# ---------------------------------------------------------------------------
+# Layer-group launch account (PR 7)
+# ---------------------------------------------------------------------------
+
+
+def test_stage_group_plan_partition():
+    """(grouped, plain, n_launches) must partition the stage's layers:
+    grouped + plain == layers, and launches shrink monotonically with
+    group size down to ceil(L/g)."""
+    for layers in range(1, 13):
+        for g in range(1, 13):
+            grouped, plain, n = pm._stage_group_plan(layers, g)
+            assert grouped + plain == layers
+            if g <= 1:
+                assert (grouped, plain, n) == (0, layers, layers)
+            else:
+                assert n == -(-layers // g)
+                # only a leftover chunk of ONE stays a plain layer —
+                # remainder chunks of 2..g-1 still form a (smaller) group
+                assert plain == (1 if layers % g == 1 else 0)
+
+
+def test_grouped_cycle_tables_conserve_totals():
+    """Grouping relabels per-layer cycles between `layer` and
+    `layer_group` kinds — the table total is invariant in group size."""
+    for name in ("vit_b16_256", "deit_t_224", "swin_t_224", "tnt_s_224"):
+        spec = pm.PAPER_MODELS[name]
+        base = pm.expected_phase_cycles(spec, fused=True)
+        for g in (2, 3, 4, 8):
+            grouped = pm.expected_phase_cycles(spec, fused=True,
+                                               group_size=g)
+            assert abs(sum(grouped.values()) - sum(base.values())) \
+                < 1e-6 * sum(base.values()), (name, g)
+            macs = pm.expected_phase_macs(spec, fused=True, group_size=g)
+            assert abs(sum(macs.values()) - pm.count_macs(spec).total) \
+                < 1e-6 * pm.count_macs(spec).total, (name, g)
+            assert set(macs) == set(grouped)
+
+
+def test_grouped_kinds_match_grouped_schedule():
+    """The group_size cycle table emits exactly the kinds the grouping
+    pass emits — `layer_group` appears iff a stage actually groups."""
+    from repro.models import vision_registry
+    for name in vision_registry.list_models():
+        cfg = vision_registry.build_cfg(name, fuse_group=4)
+        s = vision_registry.make_schedule(cfg)
+        spec = vision_registry.make_spec(cfg)
+        table = pm.expected_phase_cycles(spec, fused=True, group_size=4)
+        assert set(table) == set(s.counts()) - {"head"}, name
+
+
+def test_total_launch_cycles_monotone_in_group_size():
+    for name in ("vit_b16_256", "deit_t_224", "swin_t_224"):
+        spec = pm.PAPER_MODELS[name]
+        launches = [pm.total_launch_cycles(spec, group_size=g)
+                    for g in (1, 2, 4, 8)]
+        assert launches[0] > 0
+        assert all(a >= b for a, b in zip(launches, launches[1:])), name
+
+
+def test_grouping_speedup_model_bounds():
+    """Groupable models gain; TNT (no groupable stage) is exactly 1.0."""
+    gains = {}
+    for name in ("vit_b16_256", "deit_t_224", "swin_t_224", "tnt_s_224"):
+        r = pm.grouping_speedup_model(pm.PAPER_MODELS[name], group_size=4)
+        assert abs((r["fused_cycles"] - r["grouped_cycles"])
+                   - r["launch_cycles_reclaimed"]) < 1e-6
+        gains[name] = r["modelled_speedup"]
+    assert gains["tnt_s_224"] == 1.0
+    for name in ("vit_b16_256", "deit_t_224", "swin_t_224"):
+        assert 1.0 < gains[name] < 1.5, (name, gains[name])

@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
 """Diff two BENCH_vision_serve.json files (baseline vs candidate).
 
-Joins bench rows on (model, mode, batch, fused, devices) and prints
+Joins bench rows on (model, mode, batch, fused, group_size, devices) —
+``group_size`` is 1 on unfused/per-layer rows and the megakernel size on
+layer-group rows (absent in pre-grouping files: joined as 1) — and prints
 per-row throughput / p50 / p99 deltas plus a per-model summary (including
 the recorded fusion_speedup movement), flagging rows that appear in only
 one file.  Intended uses:
@@ -32,7 +34,7 @@ import json
 import sys
 from typing import Dict, Tuple
 
-Key = Tuple[str, str, int, bool, int]
+Key = Tuple[str, str, int, bool, int, int]
 
 REGRESSION_EXIT = 3
 CRASH_EXIT = 2
@@ -45,9 +47,11 @@ def load_rows(path: str) -> Dict[Key, dict]:
     for r in record.get("runs", []):
         # pre-fusion files have no "fused" field: those rows ARE the
         # per-phase executor, so join them as fused=False; pre-sharding
-        # files have no "devices" field: single-device rows, devices=1
+        # files have no "devices" field: single-device rows, devices=1;
+        # pre-grouping files have no "group_size": per-layer rows, 1
         key = (r["model"], r["mode"], int(r.get("batch", 0)),
-               bool(r.get("fused", False)), int(r.get("devices", 1)))
+               bool(r.get("fused", False)), int(r.get("group_size", 1)),
+               int(r.get("devices", 1)))
         rows[key] = r
     return rows
 
@@ -64,7 +68,8 @@ def compare(args) -> int:
     only_cand = sorted(set(cand) - set(base))
 
     hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
-           f"{'dev':>3} {'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
+           f"{'grp':>3} {'dev':>3} {'img/s old':>10} {'img/s new':>10} "
+           f"{'Δthr%':>7} "
            f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7} {'fus_spd':>14}")
     print(f"[compare-bench] {args.baseline} -> {args.candidate}: "
           f"{len(joined)} joined rows")
@@ -76,7 +81,7 @@ def compare(args) -> int:
         dthr = _pct(c["throughput_img_s"], b["throughput_img_s"])
         dp50 = _pct(c["latency_p50_ms"], b["latency_p50_ms"])
         worst = min(worst, dthr)
-        model, mode, batch, fused, devices = key
+        model, mode, batch, fused, group_size, devices = key
         # fusion_speedup lives on the fused row of each A/B pair only
         # (post-observability schema; older files duplicated it — either
         # way it only ever appears on rows where both sides carry it)
@@ -88,7 +93,8 @@ def compare(args) -> int:
         else:
             fs = ""
         print(f"{model:<10} {mode:<6} {batch:>5} "
-              f"{'fused' if fused else 'unfused':<7} {devices:>3} "
+              f"{'fused' if fused else 'unfused':<7} "
+              f"{group_size:>3} {devices:>3} "
               f"{b['throughput_img_s']:>10.1f} "
               f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "
               f"{b['latency_p50_ms']:>8.2f} {c['latency_p50_ms']:>8.2f} "

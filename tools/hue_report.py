@@ -47,11 +47,15 @@ CRASH_EXIT = 2
 
 
 def profile_model(name: str, mode: str, *, batch: int, warmup: int,
-                  repeats: int, policy, seed: int = 0) -> dict:
+                  repeats: int, policy, seed: int = 0,
+                  group_size: int = 1) -> dict:
     """One (model, mode) HUE report via the serving-side entry point —
     the same `VisionServer.profile_stats` path a live server exposes, so
-    the CLI and the server report identical rows."""
-    cfg = vision_registry.build_cfg(name)
+    the CLI and the server report identical rows.  ``group_size > 1``
+    profiles the layer-group megakernel chain: the measured
+    ``layer_group`` rows join against the grouped analytic attribution
+    and the total row reports the launch cycles grouping reclaims."""
+    cfg = vision_registry.build_cfg(name, fuse_group=group_size)
     params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
     qparams = cal = None
     if mode == "int8":
@@ -81,9 +85,12 @@ def fusion_warn(path: str) -> int:
               f"every fused configuration is a measured win")
         return 0
     for r in regs:
+        variant = (f"grouped(x{r['group_size']})"
+                   if r.get("group_size", 1) > 1 else "fused")
         print(f"::warning title=fused slower than unfused::"
               f"{r['model']} {r['mode']} batch={r['batch']} "
-              f"devices={r['devices']}: measured fusion_speedup "
+              f"devices={r['devices']}: measured {variant} "
+              f"fusion_speedup "
               f"{r['fusion_speedup']:.3f} < 1.0 — 'always' ships a loss "
               f"here; '--fusion-policy auto' serves it unfused")
     print(f"[hue-report] {path}: {len(regs)} fused configuration(s) "
@@ -115,6 +122,9 @@ def main(argv=None) -> int:
                     default=os.path.join("results",
                                          "BENCH_vision_serve.json"),
                     help="bench JSON seeding the 'auto' policy")
+    ap.add_argument("--fuse-group-size", type=int, default=1,
+                    help="profile the layer-group megakernel chain at "
+                         "this group size (1 = per-layer fused chain)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None,
                     help="also write every report as one JSON record")
@@ -136,17 +146,22 @@ def main(argv=None) -> int:
             f"registered models are: {', '.join(registered)}")
     modes = ("float", "int8") if args.mode == "both" else (args.mode,)
 
+    if args.fuse_group_size < 1:
+        raise SystemExit("[hue-report] --fuse-group-size must be >= 1")
     policy = None
     if args.fusion_policy == "auto":
         if os.path.exists(args.fusion_data):
-            policy = FusionPolicy.from_bench(args.fusion_data)
+            policy = FusionPolicy.from_bench(
+                args.fusion_data, default_group=args.fuse_group_size)
         else:
             print(f"[hue-report] WARNING: --fusion-data "
                   f"{args.fusion_data} not found; 'auto' falls back to "
                   f"the modelled default (fuse)")
-            policy = FusionPolicy(mode="auto")
+            policy = FusionPolicy(mode="auto",
+                                  default_group=args.fuse_group_size)
     elif args.fusion_policy:
-        policy = FusionPolicy(mode=args.fusion_policy)
+        policy = FusionPolicy(mode=args.fusion_policy,
+                              default_group=args.fuse_group_size)
 
     reports = []
     for name in models:
@@ -154,12 +169,15 @@ def main(argv=None) -> int:
             report = profile_model(name, mode, batch=args.batch,
                                    warmup=args.warmup,
                                    repeats=args.repeats,
-                                   policy=policy, seed=args.seed)
+                                   policy=policy, seed=args.seed,
+                                   group_size=args.fuse_group_size)
             reports.append(report)
             print(hue_lib.render_hue_table(
                 report,
                 title=f"{name} ({report['config']}) mode={mode} "
-                      f"fused={report['fused']} batch={report['batch']}"))
+                      f"fused={report['fused']} "
+                      f"group={report.get('group_size', 1)} "
+                      f"batch={report['batch']}"))
             print()
 
     if args.json_out:
@@ -167,6 +185,7 @@ def main(argv=None) -> int:
                   "modes": list(modes), "batch": args.batch,
                   "repeats": args.repeats,
                   "fusion_policy": args.fusion_policy,
+                  "fuse_group_size": args.fuse_group_size,
                   "device_count": jax.device_count(),
                   "reports": reports}
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
