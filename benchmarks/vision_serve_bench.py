@@ -29,13 +29,21 @@ are sorted by (model, mode, batch, fused, group_size) so
 `tools/compare_bench.py` diffs are stable across runs.
 
 On a multi-device host (CI fakes 8 CPU devices via ``XLA_FLAGS``) each
-model additionally emits SHARDED rows: the fused schedule drained through
-a data-parallel ``("data",)`` mesh over every visible device, float and
-int8, with the sharded logits gated against the single-device rows under
-the same calibration tolerance.  Every row records ``devices`` (the
-mesh's data-axis size; 1 for unsharded rows) and ``device_count``
-(`jax.device_count()` of the run) so `tools/compare_bench.py` can join on
-(model, mode, batch, fused, devices) across hosts.
+model additionally emits SHARDED rows across a MESH-SHAPE sweep: the 1-D
+data-parallel ``("data",)`` mesh over every visible device plus (on
+8-device hosts) the 2-D ``("data", "model")`` latency meshes 4x2 and 2x4
+(head-sharded MSA + column-sharded MLP under `shard_map`).  Each mesh
+shape contributes throughput rows (fused, and grouped where active,
+float and int8, gated against the single-device logits under the
+calibration tolerance) AND a batch=1 LATENCY row per model per mode —
+one request submitted and drained at a time, the edge/interactive metric
+the 2-D mesh exists for (``latency_path: true``; on the 1-D mesh the
+single image pads up to the data axis, which is exactly the baseline the
+2-D rows are meant to beat).  Every row records ``devices`` (total mesh
+size; 1 for unsharded rows), ``mesh_shape`` (``"DxM"``; ``"1x1"``
+unsharded) and ``device_count`` (`jax.device_count()` of the run) so
+`tools/compare_bench.py` can join on (model, mode, batch, fused,
+devices, mesh_shape) across hosts.
 
 The bench FAILS (non-zero exit) if any registered model is missing a
 bench row (unfused, fused, AND grouped), if a model's int8 logits drift
@@ -54,6 +62,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 os.pardir, "src"))
@@ -93,13 +102,67 @@ def _timed_ab_drains(servers: dict, images: np.ndarray,
     return best
 
 
+def mesh_shapes_for(ndev: int):
+    """Mesh shapes the sharded sweep covers on an ``ndev``-device host:
+    the 1-D data mesh over every device always, plus the 2-D
+    (data, model) latency meshes on the 8-device CI topology."""
+    if ndev <= 1:
+        return []
+    shapes = [(ndev, 1)]
+    if ndev == 8:
+        shapes += [(4, 2), (2, 4)]
+    return shapes
+
+
+def _batch1_latency_drain(server, images: np.ndarray, repeats: int):
+    """Serve one request at a time (submit -> drain -> next) and keep the
+    best-p50 pass: the interactive/edge latency metric.  Unlike the
+    queue-drain throughput rows (where reported latency includes queue
+    wait), every request here meets an idle server, so p50 is the
+    single-image forward time for this mesh shape.  Returns
+    (best_stats_row, logits) with ``latency_path: True`` stamped on the
+    row."""
+    server.submit(images[0])
+    server.step()                            # compile warm-up drain
+    best, out = None, None
+    for _ in range(max(repeats, 1)):
+        pad0, done0 = server.n_padded, len(server.done)
+        t0 = time.perf_counter()
+        for im in images:
+            server.submit(im)
+            server.step()
+        dt = time.perf_counter() - t0
+        reqs = server.done[done0:]
+        if out is None:
+            out = np.stack([r.logits for r in reqs])
+        lat_ms = np.array([r.latency_s for r in reqs]) * 1e3
+        row = {
+            "mode": server.mode,
+            "requests": len(reqs),
+            "devices": server.n_devices,
+            "mesh_shape": server.mesh_shape,
+            "batches": len(reqs),
+            "padded": server.n_padded - pad0,
+            "wall_s": dt,
+            "throughput_img_s": len(reqs) / dt if dt > 0 else 0.0,
+            "latency_p50_ms": float(np.percentile(lat_ms, 50)),
+            "latency_p99_ms": float(np.percentile(lat_ms, 99)),
+            "latency_mean_ms": float(lat_ms.mean()),
+            "latency_path": True,
+        }
+        if best is None or row["latency_p50_ms"] < best["latency_p50_ms"]:
+            best = row
+    return best, out
+
+
 def bench_model(name: str, *, requests: int, batches, repeats: int,
                 seed: int = 0, policy_mode: str = "always",
                 group_size: int = DEFAULT_GROUP):
     """One model through {float,int8} x batch buckets x
-    {unfused,fused,grouped} (plus sharded data-parallel rows on a
-    multi-device host); returns
-    (rows, ptq_parity, fusion_parity, sharded_parity_or_None).
+    {unfused,fused,grouped} (plus, on a multi-device host, sharded
+    throughput rows and batch=1 latency rows per mesh shape from
+    `mesh_shapes_for`); returns
+    (rows, ptq_parity, fusion_parity, sharded_parity_list).
     ``policy_mode`` tags each fused row with the serving decision the
     `core.schedule.FusionPolicy` would make for that cell (``auto``
     decides from the speedup measured in THIS run)."""
@@ -259,11 +322,13 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
           f"modelled={modelled:.3f}/{modelled_grp:.3f} "
           f"policy={policy_mode}")
 
-    # -- sharded rows + parity: data-parallel mesh over every device ------
-    sharded = None
+    # -- sharded rows + parity: mesh-shape sweep (1-D data mesh over every
+    #    device, plus the 2-D (data, model) latency meshes on 8 devices) --
+    sharded = []
     ndev = jax.device_count()
-    if ndev > 1:
-        batch = max(batches)
+    batch = max(batches)
+    for dp, mp in mesh_shapes_for(ndev):
+        shape_str = f"{dp}x{mp}"
         errs = {}
         sharded_variants = [("fused", 1)]
         if grouping_active:
@@ -273,7 +338,8 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                 server = VisionServer(cfgs[variant], params,
                                       qparams=qparams,
                                       calibrator=cal, mode=mode,
-                                      buckets=(batch,), data_parallel=ndev)
+                                      buckets=(batch,),
+                                      mesh_shape=shape_str)
                 server.submit_many(images)
                 server.run()                 # compile warm-up drain
                 done = sorted(server.done, key=lambda r: r.rid)
@@ -285,9 +351,9 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                 stats["model"] = name
                 stats["config"] = cfg.name
                 # the bucket actually drained: ``batch`` rounded up to a
-                # multiple of the device count — NOT the nominal sweep
+                # multiple of the DATA-axis size — NOT the nominal sweep
                 # batch, so cross-host joins compare like against like
-                stats["batch"] = server.buckets[0]
+                stats["batch"] = server.buckets[-1]
                 stats["fused"] = True
                 stats["group_size"] = gs
                 stats["device_count"] = ndev
@@ -295,24 +361,53 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                 rows.append(stats)
                 print(
                     f"vision_serve.{name}.{mode}.b{stats['batch']}"
-                    f".sharded{ndev}.{variant},"
+                    f".sharded{shape_str}.{variant},"
                     f"{stats['wall_s'] / max(stats['requests'], 1) * 1e6:.0f},"
                     f"img_per_s={stats['throughput_img_s']:.1f} "
                     f"logit_err={errs[(variant, mode)]:.6f}")
-        sharded = {"model": name, "devices": ndev,
-                   "sharded_float_logit_max_err": errs[("fused", "float")],
-                   "sharded_int8_logit_max_err": errs[("fused", "int8")],
-                   "sharded_grouped_logit_max_err": (
-                       max(e for (v, _), e in errs.items()
-                           if v == "grouped") if grouping_active else None),
-                   "float_logit_scale": scale,
-                   "within_tolerance": bool(
-                       max(errs.values()) <= ptq_tolerance(scale))}
+        # batch=1 LATENCY row per mode: one request at a time through the
+        # fused path.  On the 2-D meshes the batch=1 fast path serves it
+        # un-padded with heads split over ``model``; on the 1-D mesh the
+        # single image pads up to the data axis — the baseline the 2-D
+        # rows exist to beat (tests/test_bench_decisions.py tracks who
+        # actually wins per model).
+        for mode in ("float", "int8"):
+            server = VisionServer(cfgs["fused"], params, qparams=qparams,
+                                  calibrator=cal, mode=mode,
+                                  buckets=(1,), mesh_shape=shape_str)
+            stats, b1 = _batch1_latency_drain(server, images, repeats)
+            errs[("b1_fused", mode)] = float(
+                np.abs(b1 - logits[(mode, 1, "fused")]).max())
+            stats["model"] = name
+            stats["config"] = cfg.name
+            stats["batch"] = 1
+            stats["fused"] = True
+            stats["group_size"] = 1
+            stats["device_count"] = ndev
+            rows.append(stats)
+            print(f"vision_serve.{name}.{mode}.b1"
+                  f".latency{shape_str}.fused,"
+                  f"{stats['wall_s'] / max(stats['requests'], 1) * 1e6:.0f},"
+                  f"p50_ms={stats['latency_p50_ms']:.1f} "
+                  f"padded={stats['padded']} "
+                  f"logit_err={errs[('b1_fused', mode)]:.6f}")
+        parity = {"model": name, "devices": ndev, "mesh_shape": shape_str,
+                  "sharded_float_logit_max_err": errs[("fused", "float")],
+                  "sharded_int8_logit_max_err": errs[("fused", "int8")],
+                  "sharded_grouped_logit_max_err": (
+                      max(e for (v, _), e in errs.items()
+                          if v == "grouped") if grouping_active else None),
+                  "batch1_float_logit_max_err": errs[("b1_fused", "float")],
+                  "batch1_int8_logit_max_err": errs[("b1_fused", "int8")],
+                  "float_logit_scale": scale,
+                  "within_tolerance": bool(
+                      max(errs.values()) <= ptq_tolerance(scale))}
+        sharded.append(parity)
         print(f"vision_serve.{name}.sharded_parity,0,"
               f"float_err={errs[('fused', 'float')]:.6f} "
               f"int8_err={errs[('fused', 'int8')]:.6f}"
-              f"/{scale:.4f} devices={ndev} "
-              f"grouped_err={sharded['sharded_grouped_logit_max_err']}")
+              f"/{scale:.4f} mesh={shape_str} "
+              f"grouped_err={parity['sharded_grouped_logit_max_err']}")
     return rows, ptq, fusion, sharded
 
 
@@ -360,14 +455,15 @@ def main(argv=None) -> dict:
         runs.extend(rows)
         ptq_parities.append(ptq)
         fusion_parities.append(fusion)
-        if sharded is not None:
-            sharded_parities.append(sharded)
+        sharded_parities.extend(sharded)
 
     # Deterministic row order regardless of sweep/insertion order, so JSON
     # diffs (tools/compare_bench.py) are stable across runs.
     runs.sort(key=lambda r: (r["model"], r["mode"], r["batch"],
                              not r["fused"], r.get("group_size", 1),
-                             r.get("devices", 1)))
+                             r.get("devices", 1),
+                             r.get("mesh_shape", "1x1"),
+                             bool(r.get("latency_path", False))))
     record = {"bench": "vision_serve", "smoke": args.smoke,
               "models": models, "requests_per_run": requests,
               "batches": list(batches), "repeats": args.repeats,
@@ -411,19 +507,23 @@ def main(argv=None) -> dict:
             f"grouped-schedule logits drift from the unfused executor "
             f"beyond the calibration tolerance for: {', '.join(bad)}")
     if jax.device_count() > 1:
-        missing = sorted(set(models) -
-                         {p["model"] for p in sharded_parities})
+        want_mesh = {(m, f"{d}x{mp}") for m in models
+                     for d, mp in mesh_shapes_for(jax.device_count())}
+        have_mesh = {(p["model"], p["mesh_shape"])
+                     for p in sharded_parities}
+        missing = sorted(want_mesh - have_mesh)
         if missing:
+            detail = ", ".join(f"{m} [{s}]" for m, s in missing)
             raise SystemExit(
                 f"[vision-serve-bench] sharded coverage gate failed: "
                 f"{jax.device_count()} devices visible but no sharded rows "
-                f"for: {', '.join(missing)}")
-        bad = [p["model"] for p in sharded_parities
-               if not p["within_tolerance"]]
+                f"for: {detail}")
+        bad = [f"{p['model']} [{p['mesh_shape']}]"
+               for p in sharded_parities if not p["within_tolerance"]]
         if bad:
             raise SystemExit(
                 f"[vision-serve-bench] sharded parity gate failed: "
-                f"data-parallel logits drift from the single-device path "
+                f"mesh logits drift from the single-device path "
                 f"beyond the calibration tolerance for: {', '.join(bad)}")
     return record
 

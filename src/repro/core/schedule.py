@@ -406,6 +406,42 @@ def _subtree(params: Any, path: Tuple[Any, ...]) -> Any:
     return node
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Model-axis collective context for `shard_map` execution.
+
+    When the serving mesh carries a ``model`` axis, the executor body runs
+    under `shard_map`: every weight arrives as its LOCAL shard (heads /
+    MLP columns split, everything else replicated) and the two
+    row-parallel contractions per encoder block — the MSA concat
+    projection and the MLP down projection — produce partial products
+    that must be all-reduced before their residual re-entries.
+
+    ``specs`` is the `distributed.sharding.vision_param_specs` tree for
+    the SAME param tree the executor runs on: `reduce_axis` reads the
+    block's weight spec back (was its contraction dim sharded over
+    ``axis``?), so placement rule and collective can never disagree —
+    a block whose heads fell back to replication (H not divisible)
+    simply fires no psum.  ``None`` in place of a ShardCtx is the
+    single-device / GSPMD data-parallel path: no collectives.
+    """
+
+    axis: str
+    specs: Any
+
+    def reduce_axis(self, path: Tuple[Any, ...], key: str) -> Optional[str]:
+        """Mesh axis to all-reduce over after contracting with weight
+        ``key`` of the block at ``path`` — or None when replicated."""
+        node = _subtree(self.specs, path)[key]
+        if isinstance(node, QTensor):
+            node = node.values
+        dims = tuple(node)
+        return self.axis if dims and dims[0] == self.axis else None
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self.axis)
+
+
 def _matmul(x: jax.Array, w: Any, obs, site: str) -> jax.Array:
     """matmul with optional int8 quantization (w: array or QTensor)."""
     if isinstance(w, QTensor):
@@ -431,7 +467,9 @@ def _per_head_msa(bp: Any, z: jax.Array, obs, site: str,
                   mask: Optional[jax.Array]) -> jax.Array:
     """Per-head MSA over a (B', N, C) activation through the shared
     `(batch, head)` grid; B' is images, or images * windows in W-MSA mode.
-    Returns (B', N, C) with heads merged (pre concat-projection)."""
+    Returns (B', N, H·Dh) with heads merged (pre concat-projection) —
+    under head-sharded `shard_map` the weight stacks hold only the LOCAL
+    heads, so the merged width is theirs (C / model), not C."""
     b, n, c = z.shape
     if quantized:
         scale = obs.observe(f"{site}.qkv_in", z)
@@ -444,11 +482,14 @@ def _per_head_msa(bp: Any, z: jax.Array, obs, site: str,
     else:
         sa = ops.vita_msa_batched(z, bp["wq"], bp["wk"], bp["wv"],
                                   bias, mask, backend=backend)
-    return sa.transpose(0, 2, 1, 3).reshape(b, n, c).astype(z.dtype)
+    h_loc, dh = sa.shape[1], sa.shape[3]
+    return sa.transpose(0, 2, 1, 3).reshape(b, n, h_loc * dh
+                                            ).astype(z.dtype)
 
 
 def _msa_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
-               backend: Optional[str]) -> jax.Array:
+               backend: Optional[str],
+               shard: Optional[ShardCtx] = None) -> jax.Array:
     b, t, c = x.shape
     z = ops.layer_norm(x, bp["ln1_w"], bp["ln1_b"])
     if ph.window:
@@ -465,20 +506,36 @@ def _msa_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
         sa = window_reverse(sa, ph.window, gh, gw)
         if ph.shift:
             sa = jnp.roll(sa, (ph.shift, ph.shift), axis=(1, 2))
-        sa = sa.reshape(b, t, c)
+        sa = sa.reshape(b, t, sa.shape[-1])     # local width when sharded
     else:
         sa = _per_head_msa(bp, z, obs, ph.site, quantized,
                            backend, None, None)
-    return x + _matmul(sa, bp["w_msa"], obs, f"{ph.site}.w_msa")
+    proj = _matmul(sa, bp["w_msa"], obs, f"{ph.site}.w_msa")
+    if shard is not None and shard.reduce_axis(ph.path, "w_msa"):
+        # Head-sharded block: `sa` holds only the local heads' concat
+        # columns, w_msa only their rows — sum the partials over the
+        # model axis before the residual.
+        proj = shard.psum(proj)
+    return x + proj
 
 
 def _mlp_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
-               backend: Optional[str]) -> jax.Array:
+               backend: Optional[str],
+               shard: Optional[ShardCtx] = None) -> jax.Array:
     h = ops.layer_norm(x, bp["ln2_w"], bp["ln2_b"])
+    # Column-sharded MLP: w_up/b_up hold local hidden columns, w_down the
+    # matching rows — psum the down partial, then add b_down exactly once.
+    reduce = shard is not None and shard.reduce_axis(ph.path, "w_down")
     if quantized:
         hid = jax.nn.gelu(_matmul(h, bp["w_up"], obs, f"{ph.site}.w_up")
                           + bp["b_up"])
-        y = _matmul(hid, bp["w_down"], obs, f"{ph.site}.w_down") \
+        y = _matmul(hid, bp["w_down"], obs, f"{ph.site}.w_down")
+        if reduce:
+            y = shard.psum(y)
+        y = y + bp["b_down"]
+    elif reduce:
+        y = shard.psum(ops.mlp(h, bp["w_up"], bp["w_down"], bp["b_up"],
+                               None, activation="gelu", backend=backend)) \
             + bp["b_down"]
     else:
         y = ops.mlp(h, bp["w_up"], bp["w_down"], bp["b_up"], bp["b_down"],
@@ -489,9 +546,12 @@ def _mlp_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
 def _fused_layer_call(ph: Phase, bp: Any, xw: jax.Array, obs,
                       quantized: bool, backend: Optional[str],
                       bias: Optional[jax.Array],
-                      mask: Optional[jax.Array]) -> jax.Array:
+                      mask: Optional[jax.Array],
+                      shard: Optional[ShardCtx] = None) -> jax.Array:
     """One fused encoder layer over (B', N, C) — B' is images, or
     images * windows in W-MSA mode (the fold happens in `_layer_phase`)."""
+    msa_axis = shard.reduce_axis(ph.path, "w_msa") if shard else None
+    mlp_axis = shard.reduce_axis(ph.path, "w_down") if shard else None
     if quantized:
         # Frozen per-site activation scales feed the kernel's in-grid
         # requant chain — the same four sites the unfused executor
@@ -508,15 +568,18 @@ def _fused_layer_call(ph: Phase, bp: Any, xw: jax.Array, obs,
             _head_scale(bp["wv"]), bp["w_msa"].scale, bp["w_up"].scale,
             bp["w_down"].scale, bp["ln1_w"], bp["ln1_b"], bp["ln2_w"],
             bp["ln2_b"], bp["b_up"], bp["b_down"], bias, mask,
-            backend=backend).astype(xw.dtype)
+            backend=backend, msa_axis=msa_axis,
+            mlp_axis=mlp_axis).astype(xw.dtype)
     return ops.vita_layer_fused(
         xw, bp["wq"], bp["wk"], bp["wv"], bp["w_msa"], bp["ln1_w"],
         bp["ln1_b"], bp["ln2_w"], bp["ln2_b"], bp["w_up"], bp["b_up"],
-        bp["w_down"], bp["b_down"], bias, mask, backend=backend)
+        bp["w_down"], bp["b_down"], bias, mask, backend=backend,
+        msa_axis=msa_axis, mlp_axis=mlp_axis)
 
 
 def _layer_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
-                 backend: Optional[str]) -> jax.Array:
+                 backend: Optional[str],
+                 shard: Optional[ShardCtx] = None) -> jax.Array:
     """Fused encoder layer: msa -> concat -> mlp as one kernel chain.
 
     int8 calibration (observer not yet frozen) falls back to the unfused
@@ -524,12 +587,12 @@ def _layer_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
     same site names the fused kernel later consumes frozen scales for.
     """
     if quantized and (obs is None or obs.frozen is None):
-        x = _msa_phase(ph, bp, x, obs, quantized, backend)
-        return _mlp_phase(ph, bp, x, obs, quantized, backend)
+        x = _msa_phase(ph, bp, x, obs, quantized, backend, shard)
+        return _mlp_phase(ph, bp, x, obs, quantized, backend, shard)
     b, t, c = x.shape
     if not ph.window:
         return _fused_layer_call(ph, bp, x, obs, quantized, backend,
-                                 None, None)
+                                 None, None, shard)
     # W-MSA: LN / concat / residual / MLP are all per-token maps, so the
     # WHOLE fused layer commutes with the window permutation — fold the
     # windows into the batch axis, run the fused chain, unfold.
@@ -539,9 +602,10 @@ def _layer_phase(ph: Phase, bp: Any, x: jax.Array, obs, quantized: bool,
         xs = jnp.roll(xs, (-ph.shift, -ph.shift), axis=(1, 2))
     xw = window_partition(xs, ph.window)                # (B*nW, n, C)
     idx = jnp.asarray(rel_pos_index(ph.window))
-    bias = bp["rel_bias"][idx].transpose(2, 0, 1)       # (H, n, n)
+    bias = bp["rel_bias"][idx].transpose(2, 0, 1)       # (H, n, n) local
     mask = jnp.asarray(shifted_window_mask(gh, gw, ph.window, ph.shift))
-    yw = _fused_layer_call(ph, bp, xw, obs, quantized, backend, bias, mask)
+    yw = _fused_layer_call(ph, bp, xw, obs, quantized, backend, bias, mask,
+                           shard)
     y = window_reverse(yw, ph.window, gh, gw)
     if ph.shift:
         y = jnp.roll(y, (ph.shift, ph.shift), axis=(1, 2))
@@ -571,10 +635,16 @@ def _group_head_scale(wq: QTensor) -> jax.Array:
 def _grouped_layer_call(ph: Phase, sp: Dict[str, Any], xw: jax.Array, obs,
                         quantized: bool, backend: Optional[str],
                         bias: Optional[jax.Array],
-                        mask: Optional[jax.Array]) -> jax.Array:
+                        mask: Optional[jax.Array],
+                        shard: Optional[ShardCtx] = None) -> jax.Array:
     """One layer-group megakernel call over (B', N, C): ``sp`` holds the
     group's stacked (L, ...) weight operands; B' is images, or
-    images * windows in W-MSA mode (the fold happens in the caller)."""
+    images * windows in W-MSA mode (the fold happens in the caller).
+    Members share one sharding decision (identical shapes, hence
+    identical specs), so the lead member's spec speaks for the group."""
+    lead = ph.members[0]
+    msa_axis = shard.reduce_axis(lead.path, "w_msa") if shard else None
+    mlp_axis = shard.reduce_axis(lead.path, "w_down") if shard else None
     if quantized:
         # (L, 4) frozen activation scales: each member's four calibration
         # sites, recorded by the (always unfused) calibration pass.
@@ -592,15 +662,18 @@ def _grouped_layer_call(ph: Phase, sp: Dict[str, Any], xw: jax.Array, obs,
             sp["w_msa"].scale, sp["w_up"].scale, sp["w_down"].scale,
             sp["ln1_w"], sp["ln1_b"], sp["ln2_w"], sp["ln2_b"],
             sp["b_up"], sp["b_down"], bias, mask,
-            backend=backend).astype(xw.dtype)
+            backend=backend, msa_axis=msa_axis,
+            mlp_axis=mlp_axis).astype(xw.dtype)
     return ops.vita_layer_group(
         xw, sp["wq"], sp["wk"], sp["wv"], sp["w_msa"], sp["ln1_w"],
         sp["ln1_b"], sp["ln2_w"], sp["ln2_b"], sp["w_up"], sp["b_up"],
-        sp["w_down"], sp["b_down"], bias, mask, backend=backend)
+        sp["w_down"], sp["b_down"], bias, mask, backend=backend,
+        msa_axis=msa_axis, mlp_axis=mlp_axis)
 
 
 def _layer_group_phase(ph: Phase, params: Any, x: jax.Array, obs,
-                       quantized: bool, backend: Optional[str]) -> jax.Array:
+                       quantized: bool, backend: Optional[str],
+                       shard: Optional[ShardCtx] = None) -> jax.Array:
     """Layer-group megakernel phase: L encoder blocks, one kernel chain.
 
     int8 calibration (observer not yet frozen) falls back to per-member
@@ -613,14 +686,14 @@ def _layer_group_phase(ph: Phase, params: Any, x: jax.Array, obs,
     if quantized and (obs is None or obs.frozen is None):
         for m in ph.members:
             x = _layer_phase(m, _subtree(params, m.path), x, obs,
-                             quantized, backend)
+                             quantized, backend, shard)
         return x
     sp = _stack_block_params([_subtree(params, m.path)
                               for m in ph.members])
     b, t, c = x.shape
     if not ph.window:
         return _grouped_layer_call(ph, sp, x, obs, quantized, backend,
-                                   None, None)
+                                   None, None, shard)
     gh, gw = ph.grid
     xs = x.reshape(b, gh, gw, c)
     if ph.shift:
@@ -630,7 +703,7 @@ def _layer_group_phase(ph: Phase, params: Any, x: jax.Array, obs,
     bias = sp["rel_bias"][:, idx].transpose(0, 3, 1, 2)  # (L, H, n, n)
     mask = jnp.asarray(shifted_window_mask(gh, gw, ph.window, ph.shift))
     yw = _grouped_layer_call(ph, sp, xw, obs, quantized, backend,
-                             bias, mask)
+                             bias, mask, shard)
     y = window_reverse(yw, ph.window, gh, gw)
     if ph.shift:
         y = jnp.roll(y, (ph.shift, ph.shift), axis=(1, 2))
@@ -660,7 +733,8 @@ def _merge_phase(ph: Phase, sp: Any, x: jax.Array, obs) -> jax.Array:
 
 def _apply_phase(sched: Schedule, ph: Phase, params: Any,
                  x: Optional[jax.Array], inner: Optional[jax.Array],
-                 obs, quantized: bool
+                 obs, quantized: bool,
+                 shard: Optional[ShardCtx] = None
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Execute ONE phase of the control program.
 
@@ -668,6 +742,10 @@ def _apply_phase(sched: Schedule, ph: Phase, params: Any,
     phase maps it to the next pair.  Shared by the whole-schedule replay
     (`run_schedule`) and the per-phase profiler (`profile_schedule`),
     which blocks and times each application separately.
+
+    ``shard`` (shard_map mode): only the MSA/MLP/layer phases can hold
+    model-axis-sharded weights; embed/fold/merge/head weights replicate,
+    so those phases compute full-width results locally with no change.
     """
 
     def _float(v):
@@ -693,35 +771,35 @@ def _apply_phase(sched: Schedule, ph: Phase, params: Any,
             x = x + _float(params["pos_embed"])[None]
     elif ph.kind == "msa":
         x = _msa_phase(ph, _subtree(params, ph.path), x, obs,
-                       quantized, sched.backend)
+                       quantized, sched.backend, shard)
     elif ph.kind == "mlp":
         x = _mlp_phase(ph, _subtree(params, ph.path), x, obs,
-                       quantized, sched.backend)
+                       quantized, sched.backend, shard)
     elif ph.kind == "layer":
         x = _layer_phase(ph, _subtree(params, ph.path), x, obs,
-                         quantized, sched.backend)
+                         quantized, sched.backend, shard)
     elif ph.kind == "inner_layer":
         # Fused inner block: the pixel stream through the same fused
         # kernel chain (batch axis = images x patches).
         inner = _layer_phase(ph, _subtree(params, ph.path), inner, obs,
-                             quantized, sched.backend)
+                             quantized, sched.backend, shard)
     elif ph.kind == "layer_group":
         # Megakernel: members carry their own param paths, so the group
         # phase receives the WHOLE tree and stacks the member subtrees.
         x = _layer_group_phase(ph, params, x, obs, quantized,
-                               sched.backend)
+                               sched.backend, shard)
     elif ph.kind == "inner_layer_group":
         inner = _layer_group_phase(ph, params, inner, obs, quantized,
-                                   sched.backend)
+                                   sched.backend, shard)
     elif ph.kind == "inner_msa":
         # The pixel stream's batch axis already carries images x
         # patches, so the SAME phase executors (and the same
         # `(batch, head)` grid kernels) run the inner blocks.
         inner = _msa_phase(ph, _subtree(params, ph.path), inner, obs,
-                           quantized, sched.backend)
+                           quantized, sched.backend, shard)
     elif ph.kind == "inner_mlp":
         inner = _mlp_phase(ph, _subtree(params, ph.path), inner, obs,
-                           quantized, sched.backend)
+                           quantized, sched.backend, shard)
     elif ph.kind == "fold":
         x = _fold_phase(ph, _subtree(params, ph.path), x, inner, obs)
     elif ph.kind == "merge":
@@ -735,20 +813,26 @@ def _apply_phase(sched: Schedule, ph: Phase, params: Any,
 
 
 def run_schedule(sched: Schedule, params: Any, patches: jax.Array,
-                 observer=None) -> jax.Array:
+                 observer=None, *,
+                 shard: Optional[ShardCtx] = None) -> jax.Array:
     """Replay a compiled schedule: patches (B, N, P*P*3) -> logits.
 
     Float params run through the Pallas/XLA batched ops; `QTensor` params
     plus a `core.quant.Calibrator` observer run the int8 PTQ path (the
     observer records activation amax when calibrating, returns frozen
     scales at inference).
+
+    ``shard``: `ShardCtx` when the replay body runs under `shard_map`
+    with model-axis-sharded params (see `build_sharded_fn`); None for
+    single-device and GSPMD data-parallel execution.
     """
     obs = observer
     quantized = isinstance(params["patch_embed"], QTensor)
     x = patches
     inner: Optional[jax.Array] = None      # TNT pixel stream (B*N, m, c)
     for ph in sched.phases:
-        x, inner = _apply_phase(sched, ph, params, x, inner, obs, quantized)
+        x, inner = _apply_phase(sched, ph, params, x, inner, obs,
+                                quantized, shard)
     return x
 
 
@@ -930,7 +1014,7 @@ class FusionPolicy:
 
 
 # ---------------------------------------------------------------------------
-# Mesh-aware executor entry (data-parallel batch grid)
+# Mesh-aware executor entry (data-parallel batch grid, 2-D latency mesh)
 # ---------------------------------------------------------------------------
 
 
@@ -938,34 +1022,97 @@ def place_schedule_inputs(params: Any, patches: jax.Array, mesh):
     """Place executor inputs under `NamedSharding` for a serving mesh.
 
     Params (float arrays or int8 `QTensor`s — whose per-channel weight
-    scales ride along as pytree children) replicate across the data axis;
-    the patch batch shards over ``data`` when the batch size divides the
-    axis, falling back to replication otherwise (the `_fits` ladder —
-    never a compile error).  The frozen activation-calibration scales are
-    closure scalars inside the jitted replay and replicate on their own.
+    scales ride along as pytree children) replicate across the data axes;
+    on a 2-D ``("data", "model")`` mesh the per-head stacks / MLP columns
+    additionally shard over ``model`` (`vision_param_specs`).  The patch
+    batch shards over ``data`` when the batch size divides the axis,
+    falling back to replication otherwise (the `_fits` ladder — never a
+    compile error).  The frozen activation-calibration scales are closure
+    scalars inside the jitted replay and replicate on their own.
     """
     from repro.distributed import sharding as shd
     return (shd.shard_vision_params(params, mesh),
             shd.shard_vision_batch(patches, mesh))
 
 
+def build_sharded_fn(sched: Schedule, params: Any, mesh, *, batch: int,
+                     observer=None, preprocess=None, x_ndim: int = 3):
+    """Build the `shard_map` executor body for a model-axis mesh.
+
+    Returns an UNJITTED ``fn(params, x) -> logits`` closure: the schedule
+    replay wrapped in `shard_map` over the full mesh, with in_specs read
+    straight from `vision_param_specs` (weights arrive as local head /
+    MLP-column shards) and a `ShardCtx` telling the executor where its
+    two per-block all-reduces fire.  The batch rides ``data`` when
+    ``batch`` divides it and replicates otherwise — the batch=1 latency
+    case: every data row computes identical logits while the model axis
+    still splits the head grid.
+
+    Why not GSPMD for the model axis: the fused oracle's merged-QKV
+    formulation (`kernels.ref._merge_qkv` — transpose+reshape+concat over
+    the head-sharded dim) is miscompiled by the XLA SPMD partitioner on
+    this jax generation (wrong VALUES, not an error), while the same
+    program under `shard_map` sees only local shards and never partitions
+    the reshape.  1-D data meshes keep the plain-GSPMD jit path.
+
+    ``preprocess`` runs inside the shard_map body on the local batch rows
+    before the replay (the server passes `vit.extract_patches` so images
+    stream sharded, ``x_ndim=4``).  int8 requires a frozen calibrator:
+    its scales are host scalars closed over the body, replicated for
+    free.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as shd
+
+    specs = shd.vision_param_specs(params, mesh)
+    shard = ShardCtx(axis="model", specs=specs)
+    bspec = shd.vision_batch_spec(int(batch), mesh)
+    bax = tuple(bspec)[0] if len(tuple(bspec)) else None
+
+    def _full_rank(spec, leaf):
+        dims = tuple(spec)
+        return P(*(dims + (None,) * (leaf.ndim - len(dims))))
+
+    pspecs = jax.tree_util.tree_map(
+        _full_rank, specs, params, is_leaf=lambda s: isinstance(s, P))
+    x_spec = P(*((bax,) + (None,) * (x_ndim - 1)))
+
+    def body(p, x):
+        if preprocess is not None:
+            x = preprocess(x)
+        return run_schedule(sched, p, x, observer=observer, shard=shard)
+
+    return shard_map(body, mesh=mesh, in_specs=(pspecs, x_spec),
+                     out_specs=P(bax, None), check_rep=False)
+
+
 def run_schedule_sharded(sched: Schedule, params: Any, patches: jax.Array,
                          mesh, observer=None) -> jax.Array:
-    """`run_schedule`, data-parallel over a device mesh.
+    """`run_schedule`, distributed over a device mesh.
 
-    Works for fused and unfused schedules in both modes: every phase —
-    including the fused ``layer`` / ``inner_layer`` kernel chains and the
-    window/pixel folds, which only reshape *within* an image's batch row —
-    keeps the batch axis outermost-parallel, so one `PartitionSpec` on the
-    executor inputs shards the whole replay.  int8 requires a *frozen*
-    calibrator (calibration itself is a host-side amax loop and stays
-    single-device).
+    1-D ``("data",)`` meshes run the GSPMD jit path unchanged: every
+    phase — including the fused ``layer`` / ``inner_layer`` kernel chains
+    and the window/pixel folds, which only reshape *within* an image's
+    batch row — keeps the batch axis outermost-parallel, so one
+    `PartitionSpec` on the executor inputs shards the whole replay.
+
+    2-D ``("data", "model")`` meshes route through `build_sharded_fn`:
+    the head grid and MLP columns split over ``model`` under `shard_map`,
+    with explicit psums at the two residual re-entries.  int8 requires a
+    *frozen* calibrator either way (calibration itself is a host-side
+    amax loop and stays single-device).
 
     Serving keeps its own per-bucket jit cache (`VisionServer`); this
     entry compiles per call and is meant for tests and one-shot runs.
     """
     assert observer is None or observer.frozen is not None, \
         "sharded execution needs frozen calibration scales (or float mode)"
+    from repro.distributed import sharding as shd
     params, patches = place_schedule_inputs(params, patches, mesh)
+    if shd.axis_size(mesh, "model") > 1:
+        fn = build_sharded_fn(sched, params, mesh,
+                              batch=patches.shape[0], observer=observer)
+        return jax.jit(fn)(params, patches)
     fwd = jax.jit(lambda p, x: run_schedule(sched, p, x, observer=observer))
     return fwd(params, patches)

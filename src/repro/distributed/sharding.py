@@ -197,20 +197,34 @@ def cache_spec_tree(cfg: ModelConfig, caches_shape: Any, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
-# Vision serving specs (data-parallel batch grid)
+# Vision serving specs (data-parallel batch grid + model-axis head grid)
 # ---------------------------------------------------------------------------
 #
 # The vision pipeline's unit of work is the `(batch, head)` kernel grid with
 # the batch axis outermost-parallel (core/schedule.py), so the serving shard
-# rule is simply: batch on ``data``, params replicated.  The per-head
-# ``wq/wk/wv`` stacks (H, D, Dh) — the same nested subtree layout across all
-# four families (ViT/DeiT flat ``layers``, Swin ``stages/blocks``, TNT
-# ``inner``/``outer``) — additionally shard their head dim when the mesh
-# carries a ``model`` axis that divides H, through the same `_fits`
-# divisibility fallback as the LM rules.  int8 `QTensor` leaves need no
-# special casing: they are pytree nodes whose (values, scale) children get
-# per-leaf specs, and the frozen activation-calibration scales are scalars,
-# so every quantization scale replicates.
+# rule is: batch on ``data``, params replicated over ``data``.  When the mesh
+# carries a ``model`` axis the head grid additionally splits across it
+# (heads are independent until the concat projection — the ViTA head-level
+# pipeline's own parallel axis):
+#
+#   * ``wq/wk/wv`` (H, D, Dh) stacks — and their (H, 1, Dh) per-head int8
+#     scales — shard the head dim when H divides the axis (`_fits` ladder);
+#   * ``rel_bias`` ((2w-1)^2, H) Swin bias tables shard their head dim with
+#     the block's stacks (same H, same ladder);
+#   * ``w_msa`` (C, C) concat projections row-shard (Megatron row-parallel:
+#     each device holds the rows matching ITS heads, the executor psums the
+#     partial products at the residual) — but ONLY when the block's heads
+#     sharded, so local shapes always line up under `shard_map`;
+#   * ``w_up`` (C, hid) column-shards with ``b_up`` (hid,), and ``w_down``
+#     (hid, C) row-shards, when the MLP hidden dim divides — the classic
+#     column-then-row pair with one all-reduce at the residual re-entry.
+#     int8 per-out-channel scales follow their values ((1, hid) shards its
+#     channel dim with w_up; (1, C) contraction-side scales replicate via
+#     the same `_fits` fallback).
+#
+# The same nested subtree layout covers all four families (ViT/DeiT flat
+# ``layers``, Swin ``stages/blocks``, TNT ``inner``/``outer``).  Divisibility
+# never errors: a dim that doesn't divide degrades to replication.
 
 
 _VISION_PER_HEAD = ("wq", "wk", "wv")
@@ -220,21 +234,67 @@ def _path_names(path) -> Tuple[str, ...]:
     return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
 
 
+def _vision_head_map(params: Any) -> Dict[Tuple[str, ...], Tuple[int, int]]:
+    """(block path-name prefix) -> (H, Dh), read off each block's ``wq``
+    stack.  Keys every per-block coherence decision (may ``w_msa`` row-shard?)
+    off the SAME head count its wq/wk/wv ladder used."""
+    heads: Dict[Tuple[str, ...], Tuple[int, int]] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        names = _path_names(path)
+        if "wq" in names and len(leaf.shape) == 3:
+            heads[names[:names.index("wq")]] = \
+                (leaf.shape[0], leaf.shape[2])
+    return heads
+
+
 def vision_param_specs(params: Any, mesh: Mesh) -> Any:
     """PartitionSpec tree for a vision param tree (float or int8 PTQ).
 
-    Everything replicates over the data-parallel axes; per-head QKV stacks
-    shard head-wise over a ``model`` axis when present and divisible.
+    Everything replicates over the data-parallel axes; on a mesh with a
+    ``model`` axis the per-head QKV stacks (+ Swin bias tables) shard
+    head-wise, the concat projection row-shards with its block's heads, and
+    the MLP up/down pair column/row-shards — each through the `_fits`
+    divisibility ladder (replication fallback, never a compile error).
+    The executor (`core.schedule.ShardCtx`) reads THIS tree back to decide
+    where its `shard_map` all-reduces fire, so rule and collective can
+    never disagree.
     """
     has_model = "model" in mesh.axis_names
+    m = _axis_size(mesh, "model")
+    heads = _vision_head_map(params) if has_model else {}
 
     def rule(path, leaf):
         shape = tuple(leaf.shape)
         names = _path_names(path)
-        if has_model and len(shape) == 3 \
-                and any(n in _VISION_PER_HEAD for n in names):
+        if not has_model:
+            return P()
+        if len(shape) == 3 and any(n in _VISION_PER_HEAD for n in names):
             # (H, D, Dh) weight stack — or its (H, 1, Dh) per-head scale
             return _fits(shape, ("model", None, None), mesh)
+        if "rel_bias" in names and len(shape) == 2:
+            # ((2w-1)^2, H) bias table: heads ride dim 1, same ladder (and
+            # the same H) as the block's wq stack, so bias rows always
+            # land on the device holding their heads
+            return _fits(shape, (None, "model"), mesh)
+        if "w_msa" in names and len(shape) == 2:
+            # (C, C) concat projection: row-shard iff this block's heads
+            # sharded AND the concat dim is exactly H*Dh (head-major), so
+            # each row block matches the local heads' concat slice; the
+            # (1, C) int8 scale fails the H*Dh check and replicates
+            hd = heads.get(names[:names.index("w_msa")])
+            if hd and hd[0] % m == 0 and shape[0] == hd[0] * hd[1]:
+                return _fits(shape, ("model", None), mesh)
+            return P()
+        if "w_up" in names and len(shape) == 2:
+            # (C, hid) values and (1, hid) scale: column-parallel
+            return _fits(shape, (None, "model"), mesh)
+        if "b_up" in names and len(shape) == 1:
+            return _fits(shape, ("model",), mesh)
+        if "w_down" in names and len(shape) == 2:
+            # (hid, C) values row-parallel; the (1, C) scale's dim 0 is 1
+            # so `_fits` replicates it (it scales the FULL-width partial)
+            return _fits(shape, ("model", None), mesh)
         return P()
 
     return jax.tree_util.tree_map_with_path(rule, params)

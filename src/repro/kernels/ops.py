@@ -169,16 +169,31 @@ def vita_msa_int8(z_q, wq_q, wk_q, wv_q, x_scale, wq_scale, wk_scale,
                                  qkv_bias, interpret=_interp())
 
 
+def _no_pallas_collectives(msa_axis, mlp_axis):
+    if msa_axis is not None or mlp_axis is not None:
+        raise NotImplementedError(
+            "model-axis all-reduces (msa_axis/mlp_axis) run under "
+            "shard_map on the xla backend only; the pallas kernels are "
+            "single-device bodies")
+
+
 def vita_layer_fused(x, wq, wk, wv, w_msa, ln1_w, ln1_b, ln2_w, ln2_b,
                      w_up, b_up, w_down, b_down, bias=None, mask=None, *,
-                     backend: Optional[str] = None):
+                     backend: Optional[str] = None,
+                     msa_axis: Optional[str] = None,
+                     mlp_axis: Optional[str] = None):
     """One fused encoder layer (msa -> concat -> mlp): (B, N, D) float ->
     (B, N, D), a single kernel chain with no phase-boundary HBM round-trip.
+    ``msa_axis``/``mlp_axis`` name the mesh axis to all-reduce the two
+    row-parallel partials over when called on local shards under
+    `shard_map` (xla backend only).
     """
     if get_backend(backend) == "xla":
         return ref.vita_layer_ref(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
                                   ln2_w, ln2_b, w_up, b_up, w_down, b_down,
-                                  bias, mask)
+                                  bias, mask, msa_axis=msa_axis,
+                                  mlp_axis=mlp_axis)
+    _no_pallas_collectives(msa_axis, mlp_axis)
     return _vita_layer_pallas(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
                               ln2_w, ln2_b, w_up, b_up, w_down, b_down,
                               bias, mask, interpret=_interp())
@@ -188,7 +203,9 @@ def vita_layer_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
                     act_scales, wq_scale, wk_scale, wv_scale, wmsa_scale,
                     wup_scale, wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b,
                     b_up, b_down, bias=None, mask=None, *,
-                    backend: Optional[str] = None):
+                    backend: Optional[str] = None,
+                    msa_axis: Optional[str] = None,
+                    mlp_axis: Optional[str] = None):
     """Fused int8 encoder layer with the requant chain (frozen calibration
     ``act_scales`` = [qkv_in, w_msa, w_up, w_down]) inside the kernel."""
     if get_backend(backend) == "xla":
@@ -196,7 +213,8 @@ def vita_layer_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
             x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
             wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale,
             wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down,
-            bias, mask)
+            bias, mask, msa_axis=msa_axis, mlp_axis=mlp_axis)
+    _no_pallas_collectives(msa_axis, mlp_axis)
     return _vita_layer_int8_pallas(
         x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
         wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale, wdown_scale,
@@ -206,7 +224,9 @@ def vita_layer_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
 
 def vita_layer_group(x, wq, wk, wv, w_msa, ln1_w, ln1_b, ln2_w, ln2_b,
                      w_up, b_up, w_down, b_down, bias=None, mask=None, *,
-                     backend: Optional[str] = None):
+                     backend: Optional[str] = None,
+                     msa_axis: Optional[str] = None,
+                     mlp_axis: Optional[str] = None):
     """A layer group (L fused encoder layers, stacked leading-axis
     operands) as ONE kernel chain: (B, N, D) -> (B, N, D).  The pallas
     path runs the (B, L, H)-grid megakernel with the activation carried
@@ -215,7 +235,10 @@ def vita_layer_group(x, wq, wk, wv, w_msa, ln1_w, ln1_b, ln2_w, ln2_b,
     if get_backend(backend) == "xla":
         return ref.vita_layer_group_ref(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
                                         ln2_w, ln2_b, w_up, b_up, w_down,
-                                        b_down, bias, mask)
+                                        b_down, bias, mask,
+                                        msa_axis=msa_axis,
+                                        mlp_axis=mlp_axis)
+    _no_pallas_collectives(msa_axis, mlp_axis)
     return _vita_layer_group_pallas(x, wq, wk, wv, w_msa, ln1_w, ln1_b,
                                     ln2_w, ln2_b, w_up, b_up, w_down,
                                     b_down, bias, mask, interpret=_interp())
@@ -225,7 +248,9 @@ def vita_layer_group_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
                           act_scales, wq_scale, wk_scale, wv_scale,
                           wmsa_scale, wup_scale, wdown_scale, ln1_w, ln1_b,
                           ln2_w, ln2_b, b_up, b_down, bias=None, mask=None,
-                          *, backend: Optional[str] = None):
+                          *, backend: Optional[str] = None,
+                          msa_axis: Optional[str] = None,
+                          mlp_axis: Optional[str] = None):
     """int8 layer group: the megakernel with each member's frozen requant
     chain ((L, 4) ``act_scales``, per-layer stacked weight scales)."""
     if get_backend(backend) == "xla":
@@ -233,7 +258,8 @@ def vita_layer_group_int8(x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q,
             x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
             wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale,
             wdown_scale, ln1_w, ln1_b, ln2_w, ln2_b, b_up, b_down,
-            bias, mask)
+            bias, mask, msa_axis=msa_axis, mlp_axis=mlp_axis)
+    _no_pallas_collectives(msa_axis, mlp_axis)
     return _vita_layer_group_int8_pallas(
         x, wq_q, wk_q, wv_q, wmsa_q, wup_q, wdown_q, act_scales,
         wq_scale, wk_scale, wv_scale, wmsa_scale, wup_scale, wdown_scale,

@@ -258,7 +258,9 @@ def vita_layer_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
                    ln1_b: jax.Array, ln2_w: jax.Array, ln2_b: jax.Array,
                    w_up: jax.Array, b_up: jax.Array, w_down: jax.Array,
                    b_down: jax.Array, bias: Optional[jax.Array] = None,
-                   mask: Optional[jax.Array] = None) -> jax.Array:
+                   mask: Optional[jax.Array] = None, *,
+                   msa_axis: Optional[str] = None,
+                   mlp_axis: Optional[str] = None) -> jax.Array:
     """Fused encoder-layer oracle: x (B, N, D) -> (B, N, D).
 
     LN1 -> MSA -> concat projection -> residual -> LN2 -> MLP -> residual,
@@ -266,17 +268,31 @@ def vita_layer_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
     interface, the Q/K/V projections run as ONE merged GEMM
     (`_merge_qkv`) instead of the per-head einsums the phase oracle is
     bound to — same math, fused-only formulation freedom.
+
+    Under `shard_map` the operands may be LOCAL shards of a model-axis
+    layout (wq/wk/wv head-sharded + w_msa row-sharded when ``msa_axis``;
+    w_up/b_up column- + w_down row-sharded when ``mlp_axis``): the chain
+    then all-reduces the two row-parallel partial products over that mesh
+    axis before their residual re-entries, with ``b_down`` added after
+    the psum so it lands exactly once.
     """
     h, d, dh = wq.shape
     z = layer_norm_ref(x, ln1_w, ln1_b)
     qkv = jnp.dot(z, _merge_qkv(wq, wk, wv).astype(jnp.float32))
     q, k, v = _split_qkv(qkv, h, dh)
     merged = _attend_heads(q, k, v, dh, bias, mask)
-    h1 = x.astype(jnp.float32) + jnp.dot(merged,
-                                         w_msa.astype(jnp.float32))
+    proj = jnp.dot(merged, w_msa.astype(jnp.float32))
+    if msa_axis is not None:
+        proj = jax.lax.psum(proj, msa_axis)
+    h1 = x.astype(jnp.float32) + proj
     z2 = layer_norm_ref(h1, ln2_w, ln2_b)
-    y = h1 + fused_mlp_ref(z2, w_up, b_up, w_down, b_down,
-                           activation="gelu")
+    if mlp_axis is not None:
+        y = h1 + jax.lax.psum(
+            fused_mlp_ref(z2, w_up, b_up, w_down, None, activation="gelu"),
+            mlp_axis) + b_down.astype(jnp.float32)
+    else:
+        y = h1 + fused_mlp_ref(z2, w_up, b_up, w_down, b_down,
+                               activation="gelu")
     return y.astype(x.dtype)
 
 
@@ -291,7 +307,9 @@ def vita_layer_int8_ref(x: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
                         ln2_b: jax.Array, b_up: jax.Array,
                         b_down: jax.Array,
                         bias: Optional[jax.Array] = None,
-                        mask: Optional[jax.Array] = None) -> jax.Array:
+                        mask: Optional[jax.Array] = None, *,
+                        msa_axis: Optional[str] = None,
+                        mlp_axis: Optional[str] = None) -> jax.Array:
     """int8 fused encoder-layer oracle: the float activation stream with
     every matmul input requantized at the frozen ``act_scales`` =
     [qkv_in, w_msa, w_up, w_down] — the exact scale chain of the unfused
@@ -299,7 +317,13 @@ def vita_layer_int8_ref(x: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
     GEMMs are exact in int32, so in practice bit-identical).  As in
     `vita_layer_ref`, the Q/K/V projections run as one merged int8 GEMM
     — fusion's formulation freedom; the per-(head, out-channel) requant
-    applies the same scale to the same int32 value either way."""
+    applies the same scale to the same int32 value either way.
+
+    ``msa_axis``/``mlp_axis``: model-axis all-reduce points under
+    `shard_map` (see `vita_layer_ref`).  Correctness of psum-after-requant:
+    the contraction-side weight scales (wmsa_scale, wdown_scale) span the
+    FULL output width and replicate, so scaling the local int32 partial is
+    linear in it and commutes with the sum over devices."""
     b, n, d = x.shape
     h, _, dh = wq_q.shape
     m = wup_q.shape[1]
@@ -321,13 +345,17 @@ def vita_layer_int8_ref(x: jax.Array, wq_q: jax.Array, wk_q: jax.Array,
                           ).astype(jnp.float32) * (s[0] * scale_vec)
     q, k, v = _split_qkv(qkv, h, dh)
     merged = _attend_heads(q, k, v, dh, bias, mask)
-    h1 = x.astype(jnp.float32) + requant_mm(merged, s[1], wmsa_q,
-                                            wmsa_scale, d)
+    proj = requant_mm(merged, s[1], wmsa_q, wmsa_scale, d)
+    if msa_axis is not None:
+        proj = jax.lax.psum(proj, msa_axis)
+    h1 = x.astype(jnp.float32) + proj
     z2 = layer_norm_ref(h1, ln2_w, ln2_b)
     hid = jax.nn.gelu(requant_mm(z2, s[2], wup_q, wup_scale, m)
                       + b_up.astype(jnp.float32))
-    return h1 + requant_mm(hid, s[3], wdown_q, wdown_scale, d) \
-        + b_down.astype(jnp.float32)
+    down = requant_mm(hid, s[3], wdown_q, wdown_scale, d)
+    if mlp_axis is not None:
+        down = jax.lax.psum(down, mlp_axis)
+    return h1 + down + b_down.astype(jnp.float32)
 
 
 def vita_layer_group_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
@@ -336,7 +364,9 @@ def vita_layer_group_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
                          ln2_b: jax.Array, w_up: jax.Array, b_up: jax.Array,
                          w_down: jax.Array, b_down: jax.Array,
                          bias: Optional[jax.Array] = None,
-                         mask: Optional[jax.Array] = None) -> jax.Array:
+                         mask: Optional[jax.Array] = None, *,
+                         msa_axis: Optional[str] = None,
+                         mlp_axis: Optional[str] = None) -> jax.Array:
     """Layer-group oracle: L stacked encoder layers through the per-layer
     fused oracle, layer by layer — exactly the per-layer fused math, so
     grouped == per-layer fused by construction on this backend.
@@ -345,13 +375,17 @@ def vita_layer_group_ref(x: jax.Array, wq: jax.Array, wk: jax.Array,
     (L, H, D, Dh); w_msa: (L, D, D); LN vectors (L, D); w_up (L, D, M);
     bias (L, H, n, n)).  ``mask`` is shared: members of one group have a
     single window/shift by the grouping pass's compatibility rule.
+    ``msa_axis``/``mlp_axis`` forward to every member (one grouping pass
+    compatibility rule is identical specs across members, so the group
+    shares its members' all-reduce points).
     """
     y = x
     for l in range(wq.shape[0]):
         y = vita_layer_ref(y, wq[l], wk[l], wv[l], w_msa[l], ln1_w[l],
                            ln1_b[l], ln2_w[l], ln2_b[l], w_up[l], b_up[l],
                            w_down[l], b_down[l],
-                           None if bias is None else bias[l], mask)
+                           None if bias is None else bias[l], mask,
+                           msa_axis=msa_axis, mlp_axis=mlp_axis)
     return y
 
 
@@ -366,12 +400,14 @@ def vita_layer_group_int8_ref(x: jax.Array, wq_q: jax.Array,
                               ln2_w: jax.Array, ln2_b: jax.Array,
                               b_up: jax.Array, b_down: jax.Array,
                               bias: Optional[jax.Array] = None,
-                              mask: Optional[jax.Array] = None) -> jax.Array:
+                              mask: Optional[jax.Array] = None, *,
+                              msa_axis: Optional[str] = None,
+                              mlp_axis: Optional[str] = None) -> jax.Array:
     """int8 layer-group oracle: the per-layer int8 requant chain replayed
     over the stacked operands — each member requantizes at ITS frozen
     per-site scales (``act_scales`` is (L, 4), weight scales stack on the
     layer axis), so grouped int8 == per-layer fused int8 == unfused int8
-    bit-exact."""
+    bit-exact.  ``msa_axis``/``mlp_axis`` forward to every member."""
     y = x.astype(jnp.float32)
     for l in range(wq_q.shape[0]):
         y = vita_layer_int8_ref(
@@ -379,7 +415,8 @@ def vita_layer_group_int8_ref(x: jax.Array, wq_q: jax.Array,
             act_scales[l], wq_scale[l], wk_scale[l], wv_scale[l],
             wmsa_scale[l], wup_scale[l], wdown_scale[l], ln1_w[l],
             ln1_b[l], ln2_w[l], ln2_b[l], b_up[l], b_down[l],
-            None if bias is None else bias[l], mask)
+            None if bias is None else bias[l], mask,
+            msa_axis=msa_axis, mlp_axis=mlp_axis)
     return y
 
 

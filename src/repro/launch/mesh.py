@@ -54,20 +54,50 @@ def make_debug_mesh(*, multi_pod: bool = False, model: int = 2,
     return make_mesh_compat(shape, axes, devices=jax.devices()[:need])
 
 
-def make_vision_mesh(data: Optional[int] = None) -> Mesh:
-    """1-D ``("data",)`` mesh for data-parallel vision serving.
+def parse_mesh_shape(text) -> tuple:
+    """``"4x2"`` -> ``(4, 2)``; a bare ``"8"`` -> ``(8, 1)`` (1-D mesh).
 
-    ``data`` defaults to every visible device; vision serving replicates
-    params and shards only the micro-batch, so there is no model axis.
+    The serve CLI's ``--mesh DxM`` grammar: D data-parallel by M
+    model-parallel devices.  Accepts an ``(int, int)`` tuple unchanged.
+    """
+    if isinstance(text, (tuple, list)):
+        parts = [int(p) for p in text]
+    else:
+        parts = [int(p) for p in
+                 str(text).lower().replace("×", "x").split("x") if p != ""]
+    if len(parts) == 1:
+        parts.append(1)
+    if len(parts) != 2 or parts[0] < 1 or parts[1] < 1:
+        raise ValueError(
+            f"mesh shape must be 'D' or 'DxM' with positive ints, "
+            f"got {text!r}")
+    return tuple(parts)
+
+
+def make_vision_mesh(data: Optional[int] = None, model: int = 1) -> Mesh:
+    """Vision serving mesh.
+
+    ``model == 1`` (default) keeps the 1-D ``("data",)`` throughput mesh:
+    params replicated, only the micro-batch sharded.  ``model > 1`` builds
+    the 2-D ``("data", "model")`` latency mesh — the batch still rides
+    ``data`` while the per-head QKV stacks and MLP columns split over
+    ``model`` (see distributed/sharding.py ``vision_param_specs``).
+    ``data`` defaults to every visible device divided by ``model``.
     """
     devices = jax.devices()
-    n = len(devices) if data is None else data
-    if n < 1 or n > len(devices):
+    model = max(int(model), 1)
+    if data is None:
+        data = max(len(devices) // model, 1)
+    need = int(data) * model
+    if data < 1 or need > len(devices):
         raise RuntimeError(
-            f"vision mesh needs {n} devices, found {len(devices)}; on CPU "
-            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
-            f"{n}")
-    return make_mesh_compat((n,), ("data",), devices=devices[:n])
+            f"vision mesh ({data}, {model}) needs {need} devices, found "
+            f"{len(devices)}; on CPU run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+    if model == 1:
+        return make_mesh_compat((data,), ("data",), devices=devices[:need])
+    return make_mesh_compat((data, model), ("data", "model"),
+                            devices=devices[:need])
 
 
 # TPU v5e hardware constants used by the roofline analysis.

@@ -25,6 +25,12 @@ across a 1-D ``("data",)`` device mesh (params replicated, micro-batch
 split — `distributed.sharding.vision_param_specs` / `vision_batch_spec`).
 Buckets round up to a multiple of the data-axis size so every padded
 micro-batch lands pre-sharded before the one jitted call.
+``mesh_shape=`` / ``--mesh DxM`` instead builds the 2-D
+``("data", "model")`` latency mesh: the batch still rides ``data`` while
+the per-head QKV stacks and MLP columns split over ``model`` and the
+drain runs under `shard_map` with explicit all-reduces
+(`core.schedule.build_sharded_fn`) — so a batch=1 request engages every
+device of the model axis instead of one.
 
 Fusion is policy-driven per batch bucket: ``--fusion-policy
 {always,never,auto}`` (`core.schedule.FusionPolicy`), where ``auto``
@@ -46,6 +52,8 @@ Usage (CPU examples):
       --fusion-policy auto --profile
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --vision --model vit_edge --devices 8
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --vision --model vit_edge --mesh 4x2
 """
 
 from __future__ import annotations
@@ -70,9 +78,16 @@ from repro.models import vision_registry, vit
 
 
 def round_buckets(buckets: Sequence[int], data_parallel: int) -> Tuple[int, ...]:
-    """Round each batch bucket up to a multiple of the data-axis size (and
-    dedupe), so every padded micro-batch divides the mesh and shards
-    without a replication fallback."""
+    """Round each batch bucket up to a multiple of the DATA-axis size (and
+    dedupe), so every padded micro-batch divides the mesh's batch axis and
+    shards without a replication fallback.
+
+    ``data_parallel`` must be the data-axis size alone, NOT the total
+    device count: on a 2-D ``(data, model)`` mesh only ``data`` carries
+    the batch, so a (2, 4) mesh rounds buckets to multiples of 2 — padding
+    a 2-image bucket to 8 would serve 6 zero images per drain for a mesh
+    axis the batch never touches.
+    """
     dp = max(int(data_parallel), 1)
     return tuple(sorted({-(-b // dp) * dp for b in buckets}))
 
@@ -113,6 +128,14 @@ class VisionServer:
     jitted call — GSPMD splits the whole `(batch, head)` grid, fused or
     unfused, float or int8 (the frozen calibration scales are scalars and
     replicate as jit constants).
+
+    ``mesh_shape`` (``"DxM"`` string or ``(data, model)`` tuple) builds
+    the 2-D latency mesh instead: drains with a model axis run under
+    `shard_map` with the head grid / MLP columns split over ``model``
+    (`core.schedule.build_sharded_fn`).  Buckets round to the DATA-axis
+    size only, and when the requested buckets include 1 a dedicated
+    batch=1 bucket is kept (batch replicated over ``data``, heads still
+    split) — the latency fast path.
     """
 
     def __init__(self, cfg, params, *,
@@ -120,6 +143,7 @@ class VisionServer:
                  mode: str = "float",
                  buckets: Sequence[int] = (1, 2, 4, 8),
                  mesh=None, data_parallel: Optional[int] = None,
+                 mesh_shape=None,
                  fusion_policy: Optional[FusionPolicy] = None,
                  model_name: Optional[str] = None):
         assert mode in ("float", "int8")
@@ -127,12 +151,22 @@ class VisionServer:
             assert qparams is not None, "int8 mode needs quantized params"
             assert calibrator is not None and calibrator.frozen is not None, \
                 "int8 mode needs a frozen activation-scale calibrator"
+        if mesh is None and mesh_shape is not None:
+            from repro.launch.mesh import make_vision_mesh, parse_mesh_shape
+            d, m = parse_mesh_shape(mesh_shape)
+            if d * m > 1:
+                mesh = make_vision_mesh(data=d, model=m)
         if mesh is None and data_parallel is not None and data_parallel > 1:
             from repro.launch.mesh import make_vision_mesh
             mesh = make_vision_mesh(data_parallel)
         self.mesh = mesh
+        # Batch (data) axis size vs model axis size: bucket rounding and
+        # batch placement follow ``dp`` alone; ``mp`` decides the
+        # shard_map route.  ``n_devices`` is the whole mesh.
         self.dp = int(np.prod([shd.axis_size(mesh, a)
                                for a in shd.dp_axes(mesh)])) if mesh else 1
+        self.mp = shd.axis_size(mesh, "model") if mesh else 1
+        self.n_devices = int(mesh.devices.size) if mesh is not None else 1
         if mesh is not None:
             # Replicate only the tree this mode's forward closes over —
             # placing the unused one would cost device memory and startup
@@ -148,7 +182,14 @@ class VisionServer:
         self.mode = mode
         self.model_name = model_name or getattr(cfg, "name", "model")
         self.fusion_policy = fusion_policy
+        # Round to the DATA-axis size only (a (2, 4) mesh rounds to 2 —
+        # the model axis never carries batch rows).
         self.buckets = round_buckets(buckets, self.dp)
+        if self.mp > 1 and 1 in buckets and self.buckets[0] != 1:
+            # batch=1 latency fast path: the single image replicates over
+            # ``data`` while the model axis still splits the head grid —
+            # strictly better than padding the request up to dp images.
+            self.buckets = (1,) + self.buckets
         assert self.buckets and self.buckets[0] > 0, \
             f"batch buckets must be positive, got {buckets}"
         # Fused or per-phase schedule, decided per bucket: without a
@@ -171,37 +212,63 @@ class VisionServer:
         self.n_batches = 0
         self.n_padded = 0
         self._rid = 0
-        self._forwards: Dict[Tuple[bool, int], callable] = {}
+        self._forwards: Dict[Tuple, callable] = {}
 
-    def _forward_for(self, fused: bool, group: int = 1):
+    @property
+    def mesh_shape(self) -> str:
+        """``"DxM"`` — data-axis by model-axis size (``"1x1"`` = no mesh).
+        The join key bench rows / compare_bench / HUE reports carry."""
+        return f"{self.dp}x{self.mp}"
+
+    def _forward_for(self, fused: bool, group: int = 1,
+                     bucket: Optional[int] = None):
         """The jitted batched forward for one (fusion, group-size) variant
         (built lazily — a policy that never flips serves exactly one).
         jit's own shape-keyed cache gives one compiled program per
-        bucket."""
+        bucket.  On a model-axis mesh the variant key also carries the
+        bucket's data-divisibility: `build_sharded_fn` fixes the batch
+        PartitionSpec (sharded over ``data`` vs replicated — the batch=1
+        fast path) at trace time."""
         group = int(group) if fused else 1
-        fn = self._forwards.get((fused, group))
+        bucket = int(bucket) if bucket else self.buckets[0]
+        div = self.mp > 1 and bucket % self.dp == 0
+        key = (fused, group, div) if self.mp > 1 else (fused, group)
+        fn = self._forwards.get(key)
         if fn is not None:
             return fn
         cfg = dataclasses.replace(self.cfg, fused=fused, fuse_group=group)
-        model_fwd = vision_registry.forward_fn(cfg)
+        if self.mode == "int8":
+            p, obs = self.qparams, self.calibrator
+        else:
+            p, obs = self.params, None
         # Patchify INSIDE the compiled program: the host-side drain then
         # dispatches exactly one XLA call per micro-batch (the reshape
         # fuses into the embed matmul instead of running eagerly per step).
-        if self.mode == "int8":
-            qp, frozen_cal = self.qparams, self.calibrator
+        if self.mp > 1:
+            # shard_map drain: weights arrive as local head / MLP-column
+            # shards, the executor psums at the two residual re-entries.
+            sched = vision_registry.make_schedule(cfg)
+            body = jax.jit(sched_lib.build_sharded_fn(
+                sched, p, self.mesh, batch=bucket, observer=obs,
+                preprocess=lambda im: vit.extract_patches(im, cfg.patch),
+                x_ndim=4))
 
             def _fwd(images):
-                return model_fwd(qp, vit.extract_patches(images, cfg.patch),
-                                 cfg, observer=frozen_cal)
+                return body(p, images)
         else:
-            p = self.params
-
-            def _fwd(images):
-                return model_fwd(p, vit.extract_patches(images, cfg.patch),
-                                 cfg)
-        fn = jax.jit(_fwd)
-        self._forwards[(fused, group)] = fn
-        return fn
+            model_fwd = vision_registry.forward_fn(cfg)
+            if self.mode == "int8":
+                def _fwd_inner(images):
+                    return model_fwd(
+                        p, vit.extract_patches(images, cfg.patch),
+                        cfg, observer=obs)
+            else:
+                def _fwd_inner(images):
+                    return model_fwd(
+                        p, vit.extract_patches(images, cfg.patch), cfg)
+            _fwd = jax.jit(_fwd_inner)
+        self._forwards[key] = _fwd
+        return _fwd
 
     # -- request plane ----------------------------------------------------
 
@@ -244,7 +311,7 @@ class VisionServer:
         else:
             batch_in = jnp.asarray(images)
         forward = self._forward_for(self._bucket_fused[bucket],
-                                    self._bucket_group[bucket])
+                                    self._bucket_group[bucket], bucket)
         logits = np.asarray(jax.block_until_ready(forward(batch_in)))
         t = time.perf_counter()
         for i, req in enumerate(batch):
@@ -287,6 +354,12 @@ class VisionServer:
         cfg = dataclasses.replace(self.cfg, fused=fused, fuse_group=group)
         sched = vision_registry.make_schedule(cfg)
         params = self.qparams if self.mode == "int8" else self.params
+        if self.mp > 1:
+            # The per-phase profiler jits each phase on its own; pulling
+            # the model-axis-sharded tree back to host profiles the
+            # single-device replay (per-phase attribution, not mesh
+            # latency — the drain stats carry that).
+            params = jax.device_get(params)
         obs = self.calibrator if self.mode == "int8" else None
         images = jnp.zeros((bucket, cfg.image, cfg.image, 3), jnp.float32)
         patches = vit.extract_patches(images, cfg.patch)
@@ -298,7 +371,8 @@ class VisionServer:
             group_size=group)
         report.update({"model": self.model_name, "config": cfg.name,
                        "mode": self.mode, "batch": bucket, "fused": fused,
-                       "group_size": group, "devices": self.dp})
+                       "group_size": group, "devices": self.n_devices,
+                       "mesh_shape": self.mesh_shape})
         return report
 
     def restamp_queued(self) -> None:
@@ -327,7 +401,8 @@ class VisionServer:
         return {
             "mode": self.mode,
             "requests": served,
-            "devices": self.dp,
+            "devices": self.n_devices,
+            "mesh_shape": self.mesh_shape,
             "fusion_policy": (self.fusion_policy.mode
                               if self.fusion_policy else None),
             "fused_buckets": {str(b): bool(f)
@@ -384,6 +459,7 @@ def build_edge_vit(image: int = 32, patch: int = 8, dim: int = 96,
 def serve_model(cfg, *, requests: int, buckets: Sequence[int],
                 modes: Sequence[str], seed: int = 0, calib_images: int = 8,
                 name: Optional[str] = None, devices: int = 1,
+                mesh_shape=None,
                 fusion_policy: Optional[FusionPolicy] = None,
                 profile: bool = False) -> List[Dict[str, float]]:
     """Init params, (optionally) quantize+calibrate, and drain ``requests``
@@ -392,10 +468,12 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
     config name — the same join key the bench JSON uses) and ``config`` =
     the concrete geometry's name.  ``devices`` > 1 shards each drain's
     batch axis across that many devices (calibration stays single-device;
-    only the frozen scales reach the sharded path).  ``fusion_policy``
-    overrides ``cfg.fused`` per bucket; ``profile`` additionally runs the
-    per-phase HUE profiler after each mode's drain, prints the
-    measured-vs-modelled table, and attaches the report to the row."""
+    only the frozen scales reach the sharded path); ``mesh_shape``
+    (``"DxM"``) builds the 2-D latency mesh instead and takes precedence.
+    ``fusion_policy`` overrides ``cfg.fused`` per bucket; ``profile``
+    additionally runs the per-phase HUE profiler after each mode's drain,
+    prints the measured-vs-modelled table, and attaches the report to the
+    row."""
     params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
     rng = np.random.default_rng(seed)
     images = rng.standard_normal(
@@ -411,6 +489,7 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
         server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
                               mode=mode, buckets=buckets,
                               data_parallel=devices,
+                              mesh_shape=mesh_shape,
                               fusion_policy=fusion_policy,
                               model_name=name)
         server.submit_many(images)
@@ -419,7 +498,7 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
         stats["config"] = cfg.name
         all_stats.append(stats)
         print(f"[vision-serve] {cfg.name} mode={mode} "
-              f"devices={stats['devices']} "
+              f"mesh={stats['mesh_shape']} devices={stats['devices']} "
               f"{stats['requests']} reqs in {stats['wall_s']:.2f}s -> "
               f"{stats['throughput_img_s']:.1f} img/s, "
               f"p50 {stats['latency_p50_ms']:.1f}ms "
@@ -488,6 +567,12 @@ def main(argv=None):
                     help="data-parallel device count: shard each drain's "
                          "batch axis across this many devices (params "
                          "replicated; buckets round up to a multiple)")
+    ap.add_argument("--mesh", default=None,
+                    help="2-D mesh shape 'DxM' (data x model), e.g. 4x2: "
+                         "batch on the data axis, per-head QKV stacks and "
+                         "MLP columns split over the model axis under "
+                         "shard_map — the batch=1 latency path; takes "
+                         "precedence over --devices")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None,
                     help="write stats as a BENCH_*.json-style record")
@@ -500,6 +585,14 @@ def main(argv=None):
         return []
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.mesh is not None:
+        from repro.launch.mesh import parse_mesh_shape
+        d, m = parse_mesh_shape(args.mesh)
+        if d * m > jax.device_count():
+            raise SystemExit(
+                f"[vision-serve] --mesh {args.mesh} needs {d * m} devices "
+                f"but only {jax.device_count()} visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={d * m}")
     if args.devices > jax.device_count():
         raise SystemExit(
             f"[vision-serve] --devices {args.devices} but only "
@@ -532,7 +625,8 @@ def main(argv=None):
     modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
                             modes=modes, seed=args.seed, name=args.model,
-                            devices=args.devices, fusion_policy=policy,
+                            devices=args.devices, mesh_shape=args.mesh,
+                            fusion_policy=policy,
                             profile=args.profile)
 
     if args.json_out:
@@ -540,7 +634,7 @@ def main(argv=None):
         with open(args.json_out, "w") as f:
             json.dump({"bench": "vision_serve", "model": args.model,
                        "config": cfg.name, "buckets": list(buckets),
-                       "devices": args.devices,
+                       "devices": args.devices, "mesh": args.mesh,
                        "device_count": jax.device_count(),
                        "runs": all_stats}, f, indent=2)
         print(f"[vision-serve] wrote {args.json_out}")

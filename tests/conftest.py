@@ -51,7 +51,7 @@ def _variant_setup(name: str, mode: str):
 
 def assert_grouped_parity(name: str, *, mode: str = "float",
                           group_size: int = 4, mesh=None,
-                          backend=None):
+                          mesh_shape=None, backend=None):
     """Cross-variant parity oracle for one (model, mode) cell.
 
     Runs the SAME params/patches through the unfused per-phase executor,
@@ -66,12 +66,35 @@ def assert_grouped_parity(name: str, *, mode: str = "float",
         frozen scales through the in-grid requant chain.
 
     ``mesh``: a 1-D ``("data",)`` mesh routes every variant through
-    `run_schedule_sharded` instead.  Returns (unfused, fused, grouped)
-    logits for callers that want extra checks.
+    `run_schedule_sharded` instead.  ``mesh_shape``: a shape tuple —
+    ``(1,)`` single device, ``(8,)`` 1-D data mesh, ``(4, 2)`` /
+    ``(2, 4)`` 2-D (data, model) meshes with head-sharded MSA +
+    column-sharded MLP — built here so the matrix in
+    tests/test_parity_sweep.py stays declarative; cells whose shape
+    needs more devices than the host exposes self-skip.  Returns
+    (unfused, fused, grouped) logits for callers that want extra
+    checks.
     """
     import numpy as np
     from repro.core import schedule as sched_lib
     from repro.models import vision_registry
+
+    if mesh_shape is not None:
+        assert mesh is None, "pass mesh= or mesh_shape=, not both"
+        import jax
+        total = 1
+        for d in mesh_shape:
+            total *= int(d)
+        if total > jax.device_count():
+            pytest.skip(f"mesh shape {mesh_shape} needs {total} devices, "
+                        f"host exposes {jax.device_count()} "
+                        f"(XLA_FLAGS=--xla_force_host_platform_"
+                        f"device_count={total})")
+        if total > 1:
+            from repro.launch.mesh import make_vision_mesh
+            mesh = make_vision_mesh(
+                data=int(mesh_shape[0]),
+                model=int(mesh_shape[1]) if len(mesh_shape) > 1 else 1)
 
     cfg, params, qparams, cal, patches = _variant_setup(name, mode)
     p = qparams if mode == "int8" else params
@@ -90,8 +113,11 @@ def assert_grouped_parity(name: str, *, mode: str = "float",
     unfused = run(False, 1)
     fused = run(True, 1)
     grouped = run(True, group_size)
-    where = f"{name}/{mode}/g{group_size}" + \
-        ("/mesh" if mesh is not None else "")
+    where = f"{name}/{mode}/g{group_size}"
+    if mesh_shape is not None:
+        where += "/mesh" + "x".join(str(int(d)) for d in mesh_shape)
+    elif mesh is not None:
+        where += "/mesh"
     if mesh is None:
         np.testing.assert_array_equal(
             grouped, fused,

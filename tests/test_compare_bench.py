@@ -1,7 +1,8 @@
 """tools/compare_bench.py exit-code contract: regressions beyond
 ``--max-regression`` exit 3 (CI warns, non-blocking), tool crashes exit 2
 (CI fails — no more ``|| true`` swallowing both), clean compares exit 0;
-rows join on (model, mode, batch, fused, group_size, devices)."""
+rows join on (model, mode, batch, fused, group_size, devices,
+mesh_shape)."""
 
 import json
 import os
@@ -108,6 +109,30 @@ def test_grouped_rows_join_and_gate(tmp_path):
     assert "grp" in out                # the group_size display column
     rc, _ = _run(base, cand)
     assert rc == 0
+
+
+def test_rows_join_on_mesh_shape(tmp_path):
+    """A 2-D-mesh row (devices=8, mesh_shape 4x2) must not be compared
+    against the 1-D row of the same (model, mode, batch, fused, devices)
+    cell; pre-2-D-mesh files (no mesh_shape field) join as
+    "{devices}x1" — so legacy sharded rows keep joining the 1-D rows
+    that ARE the same configuration.  Batch=1 latency rows
+    (latency_path) likewise never join throughput rows of the same
+    shape."""
+    legacy = dict(_row(thr=100.0, devices=8))    # pre-mesh: no mesh_shape
+    base = _write(tmp_path, "base.json", [legacy])
+    one_d = dict(_row(thr=100.0, devices=8))
+    one_d["mesh_shape"] = "8x1"
+    two_d = dict(_row(thr=10.0, devices=8))
+    two_d["mesh_shape"] = "4x2"
+    lat = dict(_row(thr=10.0, devices=8))
+    lat["mesh_shape"] = "8x1"
+    lat["latency_path"] = True
+    cand = _write(tmp_path, "cand.json", [one_d, two_d, lat])
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 0, out        # only the 8x1 throughput row joined
+    assert "1 joined rows" in out
+    assert "only in candidate" in out
 
 
 def test_fusion_speedup_diff_column(tmp_path):

@@ -4,14 +4,20 @@ ONE parametrized matrix (via the `parity_oracle` conftest fixture) covers
 what previous PRs asserted piecemeal: for every registered model —
 columnar (ViT/DeiT), windowed (Swin), and hierarchical (TNT) — the three
 executor variants agree in float and int8, on a single device and across
-the ``("data",)`` mesh, and the grouped chain agrees with the per-layer
-fused one BIT-EXACT (same per-layer op sequence, one kernel).
+every mesh shape in MESH_SHAPES — the 1-D ``("data",)`` throughput mesh
+and the 2-D ``("data", "model")`` latency meshes (head-sharded MSA +
+column-sharded MLP under `shard_map`) — and the grouped chain agrees with
+the per-layer fused one BIT-EXACT (same per-layer op sequence, one
+kernel).
 
-The every-push smoke subset runs the full model x mode grid at the default
-group size; the ``slow``-marked full matrix additionally sweeps group
-sizes (including sizes larger than the layer count and sizes that leave a
-partial chunk) and the Pallas interpreter backend — CI runs it on the
-nightly/on-label leg (see .github/workflows/ci.yml).
+The every-push smoke subset runs the full model x mode grid at the
+default group size plus one model across every mesh shape; the
+``slow``-marked full matrix additionally sweeps group sizes (including
+sizes larger than the layer count and sizes that leave a partial chunk),
+the full model x mesh-shape grid, and the Pallas interpreter backend —
+CI runs it on the nightly/on-label leg (see .github/workflows/ci.yml).
+Mesh cells self-skip (inside the oracle) on hosts exposing fewer devices
+than the shape needs.
 """
 
 import jax
@@ -25,10 +31,12 @@ needs_multi = pytest.mark.skipif(
     NDEV < 2, reason="needs >=2 devices "
     "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
-
-def _mesh(n):
-    from repro.launch.mesh import make_vision_mesh
-    return make_vision_mesh(n)
+# The mesh-shape axis of the matrix: single device, the 1-D data mesh
+# over every visible device, and the two 8-device 2-D latency meshes.
+# (NDEV,) keeps the 1-D column meaningful on any multi-device host; the
+# 2-D columns self-skip below 8 devices.
+MESH_SHAPES = [(1,), (NDEV,), (4, 2), (2, 4)]
+MESH_IDS = ["x".join(str(d) for d in s) for s in MESH_SHAPES]
 
 
 # ---------------------------------------------------------------------------
@@ -43,10 +51,12 @@ def test_parity_smoke(name, mode, parity_oracle):
 
 
 @needs_multi
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES[1:], ids=MESH_IDS[1:])
 @pytest.mark.parametrize("mode", ["float", "int8"])
-def test_parity_smoke_mesh(mode, parity_oracle):
-    """One mesh cell per mode on every push (full model grid is slow)."""
-    parity_oracle("deit_t", mode=mode, group_size=4, mesh=_mesh(NDEV))
+def test_parity_smoke_mesh(mode, mesh_shape, parity_oracle):
+    """One model across every mesh shape per mode on every push (the
+    full model x mesh-shape grid is slow)."""
+    parity_oracle("deit_t", mode=mode, group_size=4, mesh_shape=mesh_shape)
 
 
 # ---------------------------------------------------------------------------
@@ -67,10 +77,16 @@ def test_parity_full(name, mode, group_size, parity_oracle):
 
 @pytest.mark.slow
 @needs_multi
+@pytest.mark.parametrize("mesh_shape", MESH_SHAPES, ids=MESH_IDS)
 @pytest.mark.parametrize("mode", ["float", "int8"])
 @pytest.mark.parametrize("name", MODELS)
-def test_parity_full_mesh(name, mode, parity_oracle):
-    parity_oracle(name, mode=mode, group_size=4, mesh=_mesh(NDEV))
+def test_parity_full_mesh(name, mode, mesh_shape, parity_oracle):
+    """Every model x mode x mesh shape, including the ``1`` column (the
+    single-device baseline inside the same matrix) and both 2-D
+    (data, model) shapes — head-divisible and head-replicating model
+    axes both exercised (deit_t's H=3 never divides, swin/vit/tnt heads
+    do)."""
+    parity_oracle(name, mode=mode, group_size=4, mesh_shape=mesh_shape)
 
 
 @pytest.mark.slow

@@ -23,6 +23,9 @@ needs_multi = pytest.mark.skipif(
 needs_four = pytest.mark.skipif(
     NDEV < 4, reason="needs >=4 devices "
     "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+needs_eight = pytest.mark.skipif(
+    NDEV < 8, reason="needs >=8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
 
 
 def _mesh(n):
@@ -100,6 +103,17 @@ def test_round_buckets():
     assert round_buckets((1, 2, 4, 8), 4) == (4, 8)
     assert round_buckets((1, 2, 4), 8) == (8,)
     assert round_buckets((3, 5), 4) == (4, 8)
+
+
+def test_parse_mesh_shape():
+    from repro.launch.mesh import parse_mesh_shape
+    assert parse_mesh_shape("4x2") == (4, 2)
+    assert parse_mesh_shape("8") == (8, 1)       # bare count = 1-D mesh
+    assert parse_mesh_shape("2×4") == (2, 4)   # unicode multiply sign
+    assert parse_mesh_shape((2, 4)) == (2, 4)
+    for bad in ("abc", "0x4", "4x-2", "1x2x3"):
+        with pytest.raises(ValueError):
+            parse_mesh_shape(bad)
 
 
 def test_single_device_server_unchanged(tiny_vit):
@@ -243,4 +257,67 @@ def test_cli_devices_roundtrip(capsys):
                                "--requests", "4", "--mode", "float",
                                "--buckets", "1,2,4"])
     assert stats and all(s["devices"] == 2 for s in stats)
+    assert sum(s["requests"] for s in stats) == 4
+
+
+# ---------------------------------------------------------------------------
+# 2-D (data, model) mesh (self-skip below 8 devices)
+# ---------------------------------------------------------------------------
+
+
+@needs_eight
+def test_bucket_rounding_uses_data_axis_not_device_count(tiny_vit):
+    """REGRESSION: on a (2, 4) mesh only 2 batch shards exist, so buckets
+    must round to multiples of the DATA-axis size (2), not the total
+    device count (8) — rounding 2 up to 8 would pad every drain 4x."""
+    cfg, params, _ = tiny_vit
+    server = VisionServer(cfg, params, mode="float", buckets=(2, 4, 8),
+                          mesh_shape="2x4")
+    assert (server.dp, server.mp, server.n_devices) == (2, 4, 8)
+    assert server.buckets == (2, 4, 8)       # NOT (8,)
+    assert server.mesh_shape == "2x4"
+
+
+@needs_eight
+def test_batch1_bucket_survives_on_model_mesh(tiny_vit):
+    """A requested bucket 1 must survive on a 2-D mesh (the batch=1
+    latency fast path: batch replicates over ``data``, heads still split
+    over ``model``) even though data-axis rounding would lift it."""
+    cfg, params, _ = tiny_vit
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 4),
+                          mesh_shape="4x2")
+    assert (server.dp, server.mp) == (4, 2)
+    assert server.buckets == (1, 4)
+    server.submit(np.zeros((cfg.image, cfg.image, 3), np.float32))
+    stats = server.run()
+    assert stats["batches"] == 1 and stats["padded"] == 0
+
+
+@needs_eight
+def test_two_d_mesh_server_drain_parity(tiny_vit):
+    """A full drain through the (2, 4) mesh — head-sharded MSA +
+    column-sharded MLP under shard_map — matches the single-device
+    server."""
+    cfg, params, images = tiny_vit
+    solo = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    solo.submit_many(images)
+    solo.run()
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4),
+                          mesh_shape="2x4")
+    server.submit_many(images)
+    stats = server.run()
+    assert stats["requests"] == len(images)
+    assert stats["devices"] == 8 and stats["mesh_shape"] == "2x4"
+    np.testing.assert_allclose(_sorted_logits(server),
+                               _sorted_logits(solo), rtol=1e-4, atol=1e-4)
+
+
+@needs_eight
+def test_cli_mesh_roundtrip(capsys):
+    """serve.py --vision --mesh DxM end-to-end through the CLI."""
+    stats = vision_serve_main(["--model", "vit_edge", "--mesh", "4x2",
+                               "--requests", "4", "--mode", "float",
+                               "--buckets", "4"])
+    assert stats and all(s["mesh_shape"] == "4x2" for s in stats)
+    assert all(s["devices"] == 8 for s in stats)
     assert sum(s["requests"] for s in stats) == 4

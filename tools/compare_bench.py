@@ -1,9 +1,12 @@
 #!/usr/bin/env python3
 """Diff two BENCH_vision_serve.json files (baseline vs candidate).
 
-Joins bench rows on (model, mode, batch, fused, group_size, devices) —
-``group_size`` is 1 on unfused/per-layer rows and the megakernel size on
-layer-group rows (absent in pre-grouping files: joined as 1) — and prints
+Joins bench rows on (model, mode, batch, fused, group_size, devices,
+mesh_shape) — ``group_size`` is 1 on unfused/per-layer rows and the
+megakernel size on layer-group rows (absent in pre-grouping files:
+joined as 1); ``mesh_shape`` is the ``"DxM"`` (data, model) mesh of
+sharded rows (absent in pre-2-D-mesh files: joined as
+``"{devices}x1"``, which is what those rows were) — and prints
 per-row throughput / p50 / p99 deltas plus a per-model summary (including
 the recorded fusion_speedup movement), flagging rows that appear in only
 one file.  Intended uses:
@@ -34,7 +37,7 @@ import json
 import sys
 from typing import Dict, Tuple
 
-Key = Tuple[str, str, int, bool, int, int]
+Key = Tuple[str, str, int, bool, int, int, str, bool]
 
 REGRESSION_EXIT = 3
 CRASH_EXIT = 2
@@ -48,10 +51,15 @@ def load_rows(path: str) -> Dict[Key, dict]:
         # pre-fusion files have no "fused" field: those rows ARE the
         # per-phase executor, so join them as fused=False; pre-sharding
         # files have no "devices" field: single-device rows, devices=1;
-        # pre-grouping files have no "group_size": per-layer rows, 1
+        # pre-grouping files have no "group_size": per-layer rows, 1;
+        # pre-2-D-mesh files have no "mesh_shape": their sharded rows
+        # were 1-D data meshes, "{devices}x1", and no "latency_path":
+        # every row was a queue-drain throughput row
+        devices = int(r.get("devices", 1))
         key = (r["model"], r["mode"], int(r.get("batch", 0)),
                bool(r.get("fused", False)), int(r.get("group_size", 1)),
-               int(r.get("devices", 1)))
+               devices, str(r.get("mesh_shape", f"{devices}x1")),
+               bool(r.get("latency_path", False)))
         rows[key] = r
     return rows
 
@@ -68,7 +76,7 @@ def compare(args) -> int:
     only_cand = sorted(set(cand) - set(base))
 
     hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
-           f"{'grp':>3} {'dev':>3} {'img/s old':>10} {'img/s new':>10} "
+           f"{'grp':>3} {'mesh':>5} {'img/s old':>10} {'img/s new':>10} "
            f"{'Δthr%':>7} "
            f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7} {'fus_spd':>14}")
     print(f"[compare-bench] {args.baseline} -> {args.candidate}: "
@@ -81,7 +89,8 @@ def compare(args) -> int:
         dthr = _pct(c["throughput_img_s"], b["throughput_img_s"])
         dp50 = _pct(c["latency_p50_ms"], b["latency_p50_ms"])
         worst = min(worst, dthr)
-        model, mode, batch, fused, group_size, devices = key
+        (model, mode, batch, fused, group_size, devices, mesh_shape,
+         latency_path) = key
         # fusion_speedup lives on the fused row of each A/B pair only
         # (post-observability schema; older files duplicated it — either
         # way it only ever appears on rows where both sides carry it)
@@ -94,7 +103,8 @@ def compare(args) -> int:
             fs = ""
         print(f"{model:<10} {mode:<6} {batch:>5} "
               f"{'fused' if fused else 'unfused':<7} "
-              f"{group_size:>3} {devices:>3} "
+              f"{group_size:>3} "
+              f"{mesh_shape + ('L' if latency_path else ''):>5} "
               f"{b['throughput_img_s']:>10.1f} "
               f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "
               f"{b['latency_p50_ms']:>8.2f} {c['latency_p50_ms']:>8.2f} "

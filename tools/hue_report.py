@@ -48,7 +48,7 @@ CRASH_EXIT = 2
 
 def profile_model(name: str, mode: str, *, batch: int, warmup: int,
                   repeats: int, policy, seed: int = 0,
-                  group_size: int = 1) -> dict:
+                  group_size: int = 1, mesh_shape: str = None) -> dict:
     """One (model, mode) HUE report via the serving-side entry point —
     the same `VisionServer.profile_stats` path a live server exposes, so
     the CLI and the server report identical rows.  ``group_size > 1``
@@ -66,7 +66,10 @@ def profile_model(name: str, mode: str, *, batch: int, warmup: int,
         cal = calibrate(qparams, cfg, calib, n_batches=2)
     server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
                           mode=mode, buckets=(batch,),
-                          fusion_policy=policy, model_name=name)
+                          fusion_policy=policy, model_name=name,
+                          mesh_shape=mesh_shape)
+    # profile_stats stamps the server's mesh_shape into the report, so
+    # per-mesh HUE artifacts join against the bench rows of that shape
     return server.profile_stats(batch, warmup=warmup, repeats=repeats)
 
 
@@ -87,9 +90,10 @@ def fusion_warn(path: str) -> int:
     for r in regs:
         variant = (f"grouped(x{r['group_size']})"
                    if r.get("group_size", 1) > 1 else "fused")
+        mesh = r.get("mesh_shape", f"{r['devices']}x1")
         print(f"::warning title=fused slower than unfused::"
               f"{r['model']} {r['mode']} batch={r['batch']} "
-              f"devices={r['devices']}: measured {variant} "
+              f"devices={r['devices']} mesh={mesh}: measured {variant} "
               f"fusion_speedup "
               f"{r['fusion_speedup']:.3f} < 1.0 — 'always' ships a loss "
               f"here; '--fusion-policy auto' serves it unfused")
@@ -125,6 +129,13 @@ def main(argv=None) -> int:
     ap.add_argument("--fuse-group-size", type=int, default=1,
                     help="profile the layer-group megakernel chain at "
                          "this group size (1 = per-layer fused chain)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve through a (data, model) mesh of this "
+                         "shape (e.g. 4x2); the per-phase replay itself "
+                         "stays single-device (attribution, not mesh "
+                         "latency) but reports are tagged with the mesh "
+                         "shape so per-mesh HUE artifacts join against "
+                         "the matching bench rows")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None,
                     help="also write every report as one JSON record")
@@ -170,7 +181,8 @@ def main(argv=None) -> int:
                                    warmup=args.warmup,
                                    repeats=args.repeats,
                                    policy=policy, seed=args.seed,
-                                   group_size=args.fuse_group_size)
+                                   group_size=args.fuse_group_size,
+                                   mesh_shape=args.mesh)
             reports.append(report)
             print(hue_lib.render_hue_table(
                 report,
@@ -187,6 +199,7 @@ def main(argv=None) -> int:
                   "fusion_policy": args.fusion_policy,
                   "fuse_group_size": args.fuse_group_size,
                   "device_count": jax.device_count(),
+                  "mesh": args.mesh,
                   "reports": reports}
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:
