@@ -45,6 +45,19 @@ unsharded) and ``device_count`` (`jax.device_count()` of the run) so
 `tools/compare_bench.py` can join on (model, mode, batch, fused,
 devices, mesh_shape) across hosts.
 
+Each model additionally emits POISSON-LOAD rows (``load_path: true``):
+the same open-loop arrival trace replayed through the continuous-batching
+admission layer (`launch.admission.AdmissionController`) and through the
+barrier-per-drain baseline at EQUAL offered load (fixed per-cell
+``arrival_rate`` from `LOAD_RATES`, loose 100 ms SLA), plus a tight-SLA
+(8 ms, rate/4) continuous-only cell that exercises the budget-driven
+bucket downgrades.  Load rows carry ``serving`` (continuous/drain),
+``arrival_rate``, ``sla_ms``, sustained ``throughput_img_s``,
+p50/p95/p99 latency, the queue-delay/service-time split and
+``sla_miss_rate`` — joined by `tools/compare_bench.py` on (model, mode,
+serving, arrival_rate, sla_ms).  ``--load-only`` runs just these cells
+(the CI Poisson smoke leg); ``--load-requests 0`` disables them.
+
 The bench FAILS (non-zero exit) if any registered model is missing a
 bench row (unfused, fused, AND grouped), if a model's int8 logits drift
 outside the calibration tolerance, if the fused OR grouped schedule's
@@ -73,11 +86,32 @@ import numpy as np                                           # noqa: E402
 from repro.core.perfmodel import (fusion_speedup_model,      # noqa: E402
                                   grouping_speedup_model)
 from repro.core.quant import ptq_tolerance                   # noqa: E402
+from repro.launch import admission as adm                    # noqa: E402
 from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
 from repro.models import vision_registry                     # noqa: E402
 
 OUT_PATH = os.path.join("results", "BENCH_vision_serve.json")
 DEFAULT_GROUP = 4
+
+# -- Poisson-load cells (the open-stream admission layer vs the
+#    fixed-bucket drain baseline at EQUAL offered load) ----------------------
+#
+# Arrival rates are FIXED per (model, mode) — near 1.3x the committed
+# drain capacity of the reference host — so the (model, mode,
+# arrival_rate, sla_ms) join key is stable across hosts and commits
+# (tools/compare_bench.py): a faster host simply runs the same offered
+# load below saturation.  Unlisted models fall back to 1.3x the drain
+# capacity THIS run measured, rounded to a coarse grid.
+LOAD_RATES = {
+    ("deit_t", "float"): 1000.0, ("deit_t", "int8"): 240.0,
+    ("swin_t", "float"): 600.0, ("swin_t", "int8"): 250.0,
+    ("tnt_s", "float"): 2300.0, ("tnt_s", "int8"): 1400.0,
+    ("vit_edge", "float"): 2600.0, ("vit_edge", "int8"): 900.0,
+}
+LOOSE_SLA_MS = 100.0      # throughput traffic: every bucket feasible
+TIGHT_SLA_MS = 8.0        # deadline traffic: forces bucket downgrades
+                          # where the big bucket's measured latency
+                          # exceeds the budget (e.g. int8 b4 cells)
 
 
 def _timed_ab_drains(servers: dict, images: np.ndarray,
@@ -155,14 +189,136 @@ def _batch1_latency_drain(server, images: np.ndarray, repeats: int):
     return best, out
 
 
+def _load_row(name: str, cfg, server, serving: str, rate: float,
+              sla_ms: float, stats: dict) -> dict:
+    """Stamp an open-stream summary into a bench row joinable on
+    (model, mode, serving, arrival_rate, sla_ms) by compare_bench."""
+    row = dict(stats)
+    row.pop("per_model", None)
+    row.update({
+        "model": name, "config": cfg.name, "mode": server.mode,
+        "batch": max(server.buckets), "fused": True, "group_size": 1,
+        "devices": server.n_devices, "mesh_shape": server.mesh_shape,
+        "device_count": jax.device_count(),
+        "load_path": True, "serving": serving,
+        "arrival_rate": rate, "sla_ms": sla_ms,
+    })
+    return row
+
+
+def _load_cells(name: str, cfg, params, qparams, cal,
+                images: np.ndarray, batches, svc_ms: dict, *,
+                load_requests: int, repeats: int, seed: int = 0):
+    """Poisson open-stream cells for one model: at a FIXED offered load
+    (`LOAD_RATES`, ~1.3x committed drain capacity) run the SAME arrival
+    trace through the admission layer (continuous batching) and through
+    the barrier-per-drain baseline, interleaved best-of-``repeats`` —
+    the apples-to-apples cell the tentpole's perf claim rests on.  A
+    second continuous-only cell at rate/4 with `TIGHT_SLA_MS` budgets
+    exercises the SLA bucket downgrades.  The per-bucket latency table
+    feeding `select_bucket` comes from THIS run's timed fused drains
+    (``svc_ms``), falling back to a fresh probe when absent
+    (``--load-only``).  Returns (rows, gate) where ``gate`` carries the
+    infeasible-served count (must be 0) and the continuous-vs-drain
+    sustained throughputs."""
+    rows, gate_rows = [], []
+    # Short real-time streams are noisy (one scheduling hiccup moves the
+    # makespan by several %): keep interleaved best-of up to 5 passes.
+    reps = min(max(repeats, 1), 5)
+    n_tight = max(load_requests // 2, 8)
+    banks = {name: images}
+    for mode in ("float", "int8"):
+        server = VisionServer(cfg, params, qparams=qparams,
+                              calibrator=cal, mode=mode,
+                              buckets=tuple(batches))
+        probed = adm.measure_bucket_latencies(server)  # warms every bucket
+        table = {b: svc_ms.get((mode, b), probed[b]) for b in batches}
+        rate = LOAD_RATES.get((name, mode))
+        if rate is None:
+            cap = max(batches) / table[max(batches)] * 1e3
+            rate = max(float(round(1.3 * cap, -1)), 10.0)
+        trace = adm.poisson_trace(rate, load_requests, name,
+                                  sla_ms=LOOSE_SLA_MS, seed=seed,
+                                  n_images=len(images))
+        tight = adm.poisson_trace(rate / 4.0, n_tight, name,
+                                  sla_ms=TIGHT_SLA_MS, seed=seed + 1,
+                                  n_images=len(images))
+        best = {}
+        infeasible = 0
+        for _ in range(reps):
+            ctl = adm.AdmissionController({name: server},
+                                          latencies={name: table})
+            runs = {("continuous", LOOSE_SLA_MS, rate):
+                    adm.run_open_stream(ctl, trace, banks),
+                    ("drain", LOOSE_SLA_MS, rate):
+                    adm.run_drain_stream(server, trace, banks)}
+            infeasible = max(infeasible,
+                             runs[("continuous", LOOSE_SLA_MS, rate)]
+                             ["infeasible_served"])
+            ctl_t = adm.AdmissionController({name: server},
+                                            latencies={name: table})
+            s_t = adm.run_open_stream(ctl_t, tight, banks)
+            infeasible = max(infeasible, s_t["infeasible_served"])
+            runs[("continuous", TIGHT_SLA_MS, rate / 4.0)] = s_t
+            for key, stats in runs.items():
+                if (key not in best or stats["throughput_img_s"] >
+                        best[key]["throughput_img_s"]):
+                    best[key] = stats
+        for (serving, sla, r), stats in sorted(best.items()):
+            rows.append(_load_row(name, cfg, server, serving, r, sla,
+                                  stats))
+            print(f"vision_serve.{name}.{mode}.load.{serving}"
+                  f".rate{r:g}.sla{sla:g},0,"
+                  f"img_per_s={stats['throughput_img_s']:.1f} "
+                  f"p50_ms={stats['latency_p50_ms']:.2f} "
+                  f"p99_ms={stats['latency_p99_ms']:.2f} "
+                  f"miss_rate={stats['sla_miss_rate']:.3f} "
+                  f"infeasible={stats.get('infeasible_served', 0)}")
+        cont = best[("continuous", LOOSE_SLA_MS, rate)]
+        drain = best[("drain", LOOSE_SLA_MS, rate)]
+        gate_rows.append({
+            "model": name, "mode": mode, "arrival_rate": rate,
+            "infeasible_served": int(infeasible),
+            "continuous_img_s": cont["throughput_img_s"],
+            "drain_img_s": drain["throughput_img_s"],
+            "continuous_beats_drain": bool(
+                cont["throughput_img_s"] >= drain["throughput_img_s"]),
+        })
+        print(f"vision_serve.{name}.{mode}.load_gate,0,"
+              f"continuous={cont['throughput_img_s']:.1f} "
+              f"drain={drain['throughput_img_s']:.1f} "
+              f"win={cont['throughput_img_s'] / max(drain['throughput_img_s'], 1e-9):.3f} "
+              f"infeasible={infeasible}")
+    return rows, gate_rows
+
+
+def load_bench_model(name: str, *, requests: int, batches,
+                     load_requests: int, repeats: int, seed: int = 0):
+    """The ``--load-only`` entry point (CI Poisson smoke leg): build the
+    fused config + PTQ calibration and run just the open-stream load
+    cells, probing per-bucket latencies instead of timing full drains."""
+    cfg = vision_registry.build_cfg(name, fused=True)
+    params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
+    qparams = vision_registry.quantize(params)
+    rng = np.random.default_rng(seed)
+    images = rng.standard_normal(
+        (requests, cfg.image, cfg.image, 3)).astype(np.float32)
+    cal = calibrate(qparams, cfg, images[:max(requests // 2, 1)])
+    return _load_cells(name, cfg, params, qparams, cal, images, batches,
+                       {}, load_requests=load_requests, repeats=repeats,
+                       seed=seed)
+
+
 def bench_model(name: str, *, requests: int, batches, repeats: int,
                 seed: int = 0, policy_mode: str = "always",
-                group_size: int = DEFAULT_GROUP):
+                group_size: int = DEFAULT_GROUP,
+                load_requests: int = 0):
     """One model through {float,int8} x batch buckets x
     {unfused,fused,grouped} (plus, on a multi-device host, sharded
     throughput rows and batch=1 latency rows per mesh shape from
-    `mesh_shapes_for`); returns
-    (rows, ptq_parity, fusion_parity, sharded_parity_list).
+    `mesh_shapes_for`, plus — when ``load_requests`` > 0 — the Poisson
+    open-stream load cells of `_load_cells`); returns
+    (rows, ptq_parity, fusion_parity, sharded_parity_list, load_gates).
     ``policy_mode`` tags each fused row with the serving decision the
     `core.schedule.FusionPolicy` would make for that cell (``auto``
     decides from the speedup measured in THIS run)."""
@@ -194,7 +350,8 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
     rows = []
     logits = {}
     decisions = []
-    for mode in ("float", "int8"):
+    svc_ms = {}              # (mode, batch) -> fused per-batch wall (ms);
+    for mode in ("float", "int8"):               # feeds the SLA tables
         for batch in batches:
             servers = {}
             for variant, _, _ in variants:
@@ -213,6 +370,8 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
                     [r.logits for r in done[:requests]])
                 servers[variant] = server
             best = _timed_ab_drains(servers, images, repeats)
+            svc_ms[(mode, batch)] = (best["fused"]["wall_s"] /
+                                     max(best["fused"]["batches"], 1) * 1e3)
             if not grouping_active:
                 best["grouped"] = dict(best["fused"])
                 logits[(mode, batch, "grouped")] = \
@@ -408,7 +567,17 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
               f"int8_err={errs[('fused', 'int8')]:.6f}"
               f"/{scale:.4f} mesh={shape_str} "
               f"grouped_err={parity['sharded_grouped_logit_max_err']}")
-    return rows, ptq, fusion, sharded
+
+    # -- Poisson open-stream load cells: continuous batching vs the drain
+    #    baseline at equal offered load, SLA tables from THIS run's timed
+    #    fused drains --------------------------------------------------------
+    load_gates = []
+    if load_requests > 0:
+        load_rows, load_gates = _load_cells(
+            name, cfg, params, qparams, cal, images, batches, svc_ms,
+            load_requests=load_requests, repeats=repeats, seed=seed)
+        rows.extend(load_rows)
+    return rows, ptq, fusion, sharded, load_gates
 
 
 def main(argv=None) -> dict:
@@ -429,6 +598,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--fuse-group-size", type=int, default=DEFAULT_GROUP,
                     help="layer-group megakernel size for the grouped "
                          "variant rows (group_size in the join key)")
+    ap.add_argument("--load-requests", type=int, default=None,
+                    help="arrivals per Poisson open-stream load cell "
+                         "(default 96, 64 with --smoke; 0 disables the "
+                         "load rows)")
+    ap.add_argument("--load-only", action="store_true",
+                    help="run ONLY the Poisson load cells (CI load smoke "
+                         "leg): skips drain/sharded rows and their gates")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
     if args.fuse_group_size < 2:
@@ -445,17 +621,29 @@ def main(argv=None) -> dict:
             f"registered models are: {', '.join(registered)}")
     requests = 8 if args.smoke else 16
     batches = (1, 4) if args.smoke else (1, 8)
+    load_requests = (args.load_requests if args.load_requests is not None
+                     else (64 if args.smoke else 96))
 
     runs, ptq_parities, fusion_parities, sharded_parities = [], [], [], []
+    load_gates = []
     for name in models:
-        rows, ptq, fusion, sharded = bench_model(
+        if args.load_only:
+            rows, gates = load_bench_model(
+                name, requests=requests, batches=batches,
+                load_requests=max(load_requests, 8), repeats=args.repeats)
+            runs.extend(rows)
+            load_gates.extend(gates)
+            continue
+        rows, ptq, fusion, sharded, gates = bench_model(
             name, requests=requests, batches=batches, repeats=args.repeats,
             policy_mode=args.fusion_policy,
-            group_size=args.fuse_group_size)
+            group_size=args.fuse_group_size,
+            load_requests=load_requests)
         runs.extend(rows)
         ptq_parities.append(ptq)
         fusion_parities.append(fusion)
         sharded_parities.extend(sharded)
+        load_gates.extend(gates)
 
     # Deterministic row order regardless of sweep/insertion order, so JSON
     # diffs (tools/compare_bench.py) are stable across runs.
@@ -463,21 +651,66 @@ def main(argv=None) -> dict:
                              not r["fused"], r.get("group_size", 1),
                              r.get("devices", 1),
                              r.get("mesh_shape", "1x1"),
-                             bool(r.get("latency_path", False))))
+                             bool(r.get("latency_path", False)),
+                             bool(r.get("load_path", False)),
+                             r.get("serving", ""),
+                             float(r.get("arrival_rate", 0.0) or 0.0),
+                             float(r.get("sla_ms", 0.0) or 0.0)))
     record = {"bench": "vision_serve", "smoke": args.smoke,
               "models": models, "requests_per_run": requests,
               "batches": list(batches), "repeats": args.repeats,
               "fusion_policy": args.fusion_policy,
               "fuse_group_size": args.fuse_group_size,
+              "load_requests": load_requests,
               "device_count": jax.device_count(),
               "ptq_parity": ptq_parities,
               "fusion_parity": fusion_parities,
               "sharded_parity": sharded_parities,
+              "load_summary": load_gates,
               "runs": runs}
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
     print(f"[vision-serve-bench] wrote {args.out}")
+
+    # -- Poisson-load gates: every benched model x mode must emit a
+    #    continuous + drain loose-SLA pair and a tight-SLA continuous row,
+    #    and no SLA-feasible request may have been served by a bucket whose
+    #    measured latency exceeded its remaining budget (the admission
+    #    layer's correctness contract).  Continuous-vs-drain is a WARN here
+    #    (tests/test_bench_decisions.py asserts it on the committed
+    #    artifact, where repeats smooth the noise).
+    if load_requests > 0:
+        want_load = {(m, mode, serving, sla) for m in models
+                     for mode in ("float", "int8")
+                     for serving, sla in (("continuous", LOOSE_SLA_MS),
+                                          ("drain", LOOSE_SLA_MS),
+                                          ("continuous", TIGHT_SLA_MS))}
+        have_load = {(r["model"], r["mode"], r["serving"], r["sla_ms"])
+                     for r in runs if r.get("load_path")}
+        missing = sorted(want_load - have_load)
+        if missing:
+            detail = ", ".join(f"{m} [{mode}, {s}, sla={sla:g}]"
+                               for m, mode, s, sla in missing)
+            raise SystemExit(
+                f"[vision-serve-bench] load coverage gate failed: no "
+                f"Poisson load row for {detail}")
+        bad = [f"{g['model']} [{g['mode']}] x{g['infeasible_served']}"
+               for g in load_gates if g["infeasible_served"] > 0]
+        if bad:
+            raise SystemExit(
+                f"[vision-serve-bench] SLA feasibility gate failed: "
+                f"requests with a feasible bucket available were served "
+                f"by an infeasible one: {', '.join(bad)}")
+        for g in load_gates:
+            if not g["continuous_beats_drain"]:
+                print(f"[vision-serve-bench] WARN: continuous batching "
+                      f"below drain baseline for {g['model']} "
+                      f"[{g['mode']}] at rate {g['arrival_rate']:g}: "
+                      f"{g['continuous_img_s']:.1f} vs "
+                      f"{g['drain_img_s']:.1f} img/s")
+    if args.load_only:
+        return record
 
     # -- registry coverage + parity gates (CI fails on any) ---------------
     want = {(m, mode, fused, gs) for m in models

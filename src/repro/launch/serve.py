@@ -21,6 +21,11 @@ Usage (CPU examples):
   # data-parallel vision serving over an 8-device mesh:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --vision --model vit_edge --devices 8
+  # open-stream vision serving: Poisson arrivals through the
+  # continuous-batching admission layer with SLA-aware bucket selection
+  # (launch/admission.py; runbook: docs/SERVING.md):
+  PYTHONPATH=src python -m repro.launch.serve --vision --model vit_edge \
+      --requests 64 --arrival-rate 800 --sla-ms 50
 """
 
 from __future__ import annotations

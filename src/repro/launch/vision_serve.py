@@ -93,12 +93,29 @@ def round_buckets(buckets: Sequence[int], data_parallel: int) -> Tuple[int, ...]
 
 
 class VisionRequest:
-    """One queued image-classification request."""
+    """One queued image-classification request.
 
-    def __init__(self, rid: int, image: np.ndarray):
+    Timing is three stamps — ``t_submit`` (queued), ``t_start`` (its
+    micro-batch was dispatched) and ``t_done`` (logits materialized) — so
+    queue delay and service time are reported SEPARATELY
+    (`queue_delay_s` / `service_s`).  On the open-stream admission path
+    that makes `restamp_queued` unnecessary: a warm-up drain inflates
+    only the warm-up requests' service time, never a later request's
+    queue delay.  ``latency_s`` (the full submit→done span) is kept for
+    drain-mode compatibility — every existing stats consumer reads it.
+
+    ``sla_ms`` is the request's latency budget (None = no deadline);
+    the admission layer's SLA-aware bucket selector
+    (`launch.admission.select_bucket`) keys off it.
+    """
+
+    def __init__(self, rid: int, image: np.ndarray,
+                 sla_ms: Optional[float] = None):
         self.rid = rid
         self.image = image
+        self.sla_ms = sla_ms
         self.t_submit = time.perf_counter()
+        self.t_start: Optional[float] = None
         self.t_done: Optional[float] = None
         self.pred: Optional[int] = None
         self.logits: Optional[np.ndarray] = None
@@ -107,6 +124,46 @@ class VisionRequest:
     def latency_s(self) -> float:
         assert self.t_done is not None, "request not served yet"
         return self.t_done - self.t_submit
+
+    @property
+    def queue_delay_s(self) -> float:
+        """Submit → dispatch: time spent waiting in the queue."""
+        assert self.t_start is not None, "request not dispatched yet"
+        return self.t_start - self.t_submit
+
+    @property
+    def service_s(self) -> float:
+        """Dispatch → done: time inside the batched forward."""
+        assert self.t_done is not None, "request not served yet"
+        assert self.t_start is not None, "request not dispatched yet"
+        return self.t_done - self.t_start
+
+    def remaining_budget_ms(self, now: Optional[float] = None) -> float:
+        """SLA budget left at ``now`` (inf when the request has none)."""
+        if self.sla_ms is None:
+            return float("inf")
+        now = time.perf_counter() if now is None else now
+        return self.sla_ms - (now - self.t_submit) * 1e3
+
+
+class InFlight:
+    """One dispatched-but-not-completed micro-batch.
+
+    `VisionServer.dispatch` returns the jitted forward's ASYNC result
+    (jax dispatches without blocking), so the caller can assemble and
+    dispatch the next micro-batch while this one executes — the
+    admission layer's dispatch ring.  `VisionServer.complete` blocks on
+    ``out`` and stamps the requests.
+    """
+
+    __slots__ = ("requests", "bucket", "out", "t_dispatch")
+
+    def __init__(self, requests: List[VisionRequest], bucket: int, out,
+                 t_dispatch: float):
+        self.requests = requests
+        self.bucket = bucket
+        self.out = out
+        self.t_dispatch = t_dispatch
 
 
 class VisionServer:
@@ -289,19 +346,37 @@ class VisionServer:
                 return b
         return self.buckets[-1]
 
-    def step(self) -> int:
-        """Drain one micro-batch; returns the number of requests served."""
-        if not self.queue:
-            return 0
-        take = min(len(self.queue), self.buckets[-1])
-        batch, self.queue = self.queue[:take], self.queue[take:]
-        bucket = self._bucket_for(take)
-        images = np.stack([r.image for r in batch])
-        if bucket > take:                      # pad up to the bucket size
-            pad = np.zeros((bucket - take,) + images.shape[1:],
+    def dispatch(self, requests: Optional[List[VisionRequest]] = None,
+                 bucket: Optional[int] = None) -> Optional[InFlight]:
+        """Assemble one micro-batch and launch the batched forward WITHOUT
+        blocking on the result (jax dispatches asynchronously), returning
+        an `InFlight` handle for `complete`.
+
+        ``requests`` defaults to popping up to ``buckets[-1]`` from this
+        server's own queue (the drain path); the admission layer passes
+        its own request group instead (its queues are per model, sorted
+        by deadline).  ``bucket`` defaults to the smallest bucket that
+        fits — the SLA-aware scheduler overrides it with its measured
+        pick.  Each request's ``t_start`` is stamped here, so queue
+        delay and service time split at the dispatch boundary.
+        """
+        if requests is None:
+            if not self.queue:
+                return None
+            take = min(len(self.queue), self.buckets[-1])
+            requests, self.queue = self.queue[:take], self.queue[take:]
+        elif not requests:
+            return None
+        bucket = self._bucket_for(len(requests)) if bucket is None \
+            else int(bucket)
+        assert len(requests) <= bucket, \
+            f"{len(requests)} requests cannot ride a {bucket}-bucket"
+        images = np.stack([r.image for r in requests])
+        if bucket > len(requests):             # pad up to the bucket size
+            pad = np.zeros((bucket - len(requests),) + images.shape[1:],
                            images.dtype)
             images = np.concatenate([images, pad])
-            self.n_padded += bucket - take
+            self.n_padded += bucket - len(requests)
         if self.mesh is not None:
             # Buckets are rounded to a multiple of the data-axis size, so
             # the padded micro-batch lands pre-sharded (batch on ``data``)
@@ -310,17 +385,35 @@ class VisionServer:
             batch_in = shd.shard_vision_batch(images, self.mesh)
         else:
             batch_in = jnp.asarray(images)
-        forward = self._forward_for(self._bucket_fused[bucket],
-                                    self._bucket_group[bucket], bucket)
-        logits = np.asarray(jax.block_until_ready(forward(batch_in)))
+        forward = self._forward_for(self._bucket_fused.get(bucket, True),
+                                    self._bucket_group.get(bucket, 1),
+                                    bucket)
+        out = forward(batch_in)                # async: no block here
         t = time.perf_counter()
-        for i, req in enumerate(batch):
+        for req in requests:
+            req.t_start = t
+        self.n_batches += 1
+        return InFlight(requests, bucket, out, t)
+
+    def complete(self, inflight: Optional[InFlight]) -> int:
+        """Block until an in-flight micro-batch's logits materialize and
+        stamp its requests done; returns the number of requests served."""
+        if inflight is None:
+            return 0
+        logits = np.asarray(jax.block_until_ready(inflight.out))
+        t = time.perf_counter()
+        for i, req in enumerate(inflight.requests):
             req.t_done = t
             req.logits = logits[i]
             req.pred = int(np.argmax(logits[i]))
-        self.done.extend(batch)
-        self.n_batches += 1
-        return take
+        self.done.extend(inflight.requests)
+        return len(inflight.requests)
+
+    def step(self) -> int:
+        """Drain one micro-batch; returns the number of requests served.
+        The blocking compose of `dispatch` + `complete` — the closed-list
+        drain path (`run`) uses it unchanged."""
+        return self.complete(self.dispatch())
 
     def profile_stats(self, batch: Optional[int] = None, *,
                       warmup: int = 1, repeats: int = 2) -> Dict:
@@ -377,7 +470,13 @@ class VisionServer:
 
     def restamp_queued(self) -> None:
         """Reset queued requests' submit clocks (e.g. after a warm-up drain,
-        so reported latencies are steady-state, not compile time)."""
+        so reported latencies are steady-state, not compile time).
+
+        DRAIN-MODE ONLY: the open-stream admission path never needs this
+        — queue delay and service time are stamped separately
+        (`VisionRequest.queue_delay_s` / `service_s`), so a warm-up
+        drain's compile time lands in the warm-up requests' service
+        span instead of polluting later requests' reported latency."""
         t = time.perf_counter()
         for r in self.queue:
             r.t_submit = t
@@ -396,7 +495,12 @@ class VisionServer:
         # ``done[-served:]`` slice is only safe behind a served > 0 guard
         # — at 0 it silently means the whole list).  Schema is identical
         # whether or not anything was served (zeros when idle).
-        lat_ms = np.array([r.latency_s for r in self.done[done0:]]) * 1e3 \
+        reqs = self.done[done0:]
+        lat_ms = np.array([r.latency_s for r in reqs]) * 1e3 \
+            if served else np.zeros((0,))
+        queue_ms = np.array([r.queue_delay_s for r in reqs]) * 1e3 \
+            if served else np.zeros((0,))
+        service_ms = np.array([r.service_s for r in reqs]) * 1e3 \
             if served else np.zeros((0,))
         return {
             "mode": self.mode,
@@ -420,6 +524,12 @@ class VisionServer:
             "latency_p99_ms": float(np.percentile(lat_ms, 99))
             if served else 0.0,
             "latency_mean_ms": float(lat_ms.mean()) if served else 0.0,
+            # queue-delay vs service-time split (submit→dispatch and
+            # dispatch→done) — the spans latency_p* conflates
+            "queue_delay_p50_ms": float(np.percentile(queue_ms, 50))
+            if served else 0.0,
+            "service_p50_ms": float(np.percentile(service_ms, 50))
+            if served else 0.0,
         }
 
 
@@ -518,14 +628,93 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
     return all_stats
 
 
+def serve_stream(model_names: Sequence[str], *, modes: Sequence[str],
+                 buckets: Sequence[int], trace, serving: str = "continuous",
+                 seed: int = 0, calib_images: int = 8, devices: int = 1,
+                 mesh_shape=None, latency_mesh=None,
+                 fusion_policy: Optional[FusionPolicy] = None,
+                 bench_data=None, full: bool = False,
+                 max_inflight: int = 2) -> List[Dict[str, float]]:
+    """Open-stream serving: replay an arrival ``trace``
+    (`launch.admission.Arrival` list) through the continuous-batching
+    admission layer (``serving="continuous"``) or the fixed-bucket drain
+    baseline (``serving="drain"``, single model only).  One
+    `VisionServer` per model in ``model_names`` shares the devices;
+    SLA bucket tables seed from ``bench_data`` (a bench JSON path/dict
+    with measured per-batch latencies) and fall back to a live
+    measurement.  ``latency_mesh`` (a ``"DxM"`` shape) additionally
+    builds a batch=1 2-D latency-path server per model that
+    tight-deadline singles route to.  Returns one stats row per mode."""
+    from repro.launch import admission as adm
+    rows = []
+    for mode in modes:
+        servers, lat_servers, banks, tables = {}, {}, {}, {}
+        for nm in model_names:
+            cfg = vision_registry.build_cfg(nm, full=full)
+            params = vision_registry.init_params(
+                jax.random.PRNGKey(seed), cfg)
+            rng = np.random.default_rng(seed)
+            banks[nm] = rng.standard_normal(
+                (calib_images, cfg.image, cfg.image, 3)).astype(np.float32)
+            qparams = cal = None
+            if mode == "int8":
+                qparams = vision_registry.quantize(params)
+                cal = calibrate(qparams, cfg, banks[nm])
+            servers[nm] = VisionServer(
+                cfg, params, qparams=qparams, calibrator=cal, mode=mode,
+                buckets=buckets, data_parallel=devices,
+                mesh_shape=mesh_shape, fusion_policy=fusion_policy,
+                model_name=nm)
+            if latency_mesh is not None:
+                lat_servers[nm] = VisionServer(
+                    cfg, params, qparams=qparams, calibrator=cal,
+                    mode=mode, buckets=(1,), mesh_shape=latency_mesh,
+                    fusion_policy=fusion_policy, model_name=nm)
+            if bench_data is not None:
+                table = adm.latency_table_from_bench(bench_data, nm, mode)
+                if table:
+                    tables[nm] = table
+        if serving == "drain":
+            assert len(servers) == 1, \
+                "the drain baseline serves a single model"
+            (nm, server), = servers.items()
+            adm.measure_bucket_latencies(server)       # compile warm-up
+            stats = adm.run_drain_stream(server, trace, banks)
+            stats["model"] = nm
+        else:
+            controller = adm.AdmissionController(
+                servers, latencies=tables or None,
+                latency_servers=lat_servers or None,
+                max_inflight=max_inflight)
+            stats = adm.run_open_stream(controller, trace, banks)
+            stats["model"] = ",".join(model_names)
+        stats.update({"mode": mode, "serving": serving,
+                      "devices": next(iter(servers.values())).n_devices,
+                      "mesh_shape": next(iter(servers.values())).mesh_shape,
+                      "offered": len(trace)})
+        rows.append(stats)
+        print(f"[vision-serve] stream {stats['model']} mode={mode} "
+              f"serving={serving} {stats['requests']} reqs in "
+              f"{stats['wall_s']:.2f}s -> "
+              f"{stats['throughput_img_s']:.1f} img/s sustained, "
+              f"p50 {stats['latency_p50_ms']:.1f}ms "
+              f"p95 {stats['latency_p95_ms']:.1f}ms "
+              f"p99 {stats['latency_p99_ms']:.1f}ms "
+              f"(queue p50 {stats['queue_delay_p50_ms']:.1f}ms, "
+              f"sla misses {stats['sla_misses']})")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         prog="vision_serve",
         description="Serve a registered vision model (ViT/DeiT/Swin/TNT) "
                     "through the batched ViTA pipeline.")
     ap.add_argument("--model", default="vit_edge",
-                    choices=vision_registry.list_models(),
-                    help="registered model to serve (see --list-models)")
+                    help="registered model to serve (see --list-models); "
+                         "open-stream runs (--arrival-rate/--trace) accept "
+                         "a comma-separated list, one multiplexed lane "
+                         "per model")
     ap.add_argument("--list-models", action="store_true",
                     help="print the registry and exit")
     ap.add_argument("--full", action="store_true",
@@ -573,6 +762,33 @@ def main(argv=None):
                          "MLP columns split over the model axis under "
                          "shard_map — the batch=1 latency path; takes "
                          "precedence over --devices")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="open-stream serving: Poisson arrival rate in "
+                         "requests/s through the continuous-batching "
+                         "admission layer (launch/admission.py) instead "
+                         "of the closed-list drain")
+    ap.add_argument("--sla-ms", type=float, default=None,
+                    help="per-request latency budget (ms) for the "
+                         "open-stream path: the SLA-aware scheduler "
+                         "picks each micro-batch's bucket from measured "
+                         "per-batch latencies so the budget holds")
+    ap.add_argument("--trace", default=None,
+                    help="replay an arrival trace JSON ({'arrivals': "
+                         "[{'t': s, 'model'?: name, 'sla_ms'?: ms}]}) "
+                         "instead of synthesizing Poisson arrivals; "
+                         "entries naming several registered models "
+                         "multiplex their per-model queues onto the "
+                         "same devices")
+    ap.add_argument("--serving", choices=("continuous", "drain"),
+                    default="continuous",
+                    help="open-stream scheduler: the continuous-batching "
+                         "admission layer (default) or the fixed-bucket "
+                         "drain baseline it is benched against")
+    ap.add_argument("--latency-mesh", default=None,
+                    help="open-stream only: additionally build a batch=1 "
+                         "2-D (data, model) latency-path server per "
+                         "model on this 'DxM' mesh; tight-deadline "
+                         "singles route to it")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=None,
                     help="write stats as a BENCH_*.json-style record")
@@ -618,11 +834,56 @@ def main(argv=None):
     elif args.fusion_policy:
         policy = FusionPolicy(mode=args.fusion_policy,
                               default_group=args.fuse_group_size)
+    modes = ("float", "int8") if args.mode == "both" else (args.mode,)
+    if args.arrival_rate is not None or args.trace is not None:
+        # open-stream serving multiplexes: --model may name several
+        # models comma-separated (one lane each, sharing the mesh)
+        model_arg = [m for m in args.model.split(",") if m]
+        from repro.launch import admission as adm
+        if args.trace is not None:
+            trace = adm.load_trace(args.trace, model_arg[0], args.sla_ms)
+        else:
+            if args.arrival_rate <= 0:
+                raise SystemExit("[vision-serve] --arrival-rate must be "
+                                 "> 0")
+            trace = adm.poisson_trace(
+                args.arrival_rate, args.requests,
+                model_arg if len(model_arg) > 1 else model_arg[0],
+                sla_ms=args.sla_ms, seed=args.seed)
+        names = sorted({a.model for a in trace})
+        unknown = sorted(set(names) - set(vision_registry.list_models()))
+        if unknown:
+            raise SystemExit(f"[vision-serve] trace names unregistered "
+                             f"model(s): {', '.join(unknown)}")
+        bench_data = args.fusion_data \
+            if os.path.exists(args.fusion_data) else None
+        all_stats = serve_stream(
+            names, modes=modes, buckets=buckets, trace=trace,
+            serving=args.serving, seed=args.seed, devices=args.devices,
+            mesh_shape=args.mesh, latency_mesh=args.latency_mesh,
+            fusion_policy=policy, bench_data=bench_data, full=args.full)
+        if args.json_out:
+            os.makedirs(os.path.dirname(args.json_out) or ".",
+                        exist_ok=True)
+            with open(args.json_out, "w") as f:
+                json.dump({"bench": "vision_serve_stream",
+                           "models": names, "serving": args.serving,
+                           "arrival_rate": args.arrival_rate,
+                           "sla_ms": args.sla_ms, "trace": args.trace,
+                           "buckets": list(buckets),
+                           "device_count": jax.device_count(),
+                           "runs": all_stats}, f, indent=2)
+            print(f"[vision-serve] wrote {args.json_out}")
+        return all_stats
+    if args.model not in vision_registry.list_models():
+        raise SystemExit(
+            f"[vision-serve] unknown model '{args.model}'; registered: "
+            f"{', '.join(vision_registry.list_models())} "
+            f"(comma-separated lists need --arrival-rate or --trace)")
     cfg = vision_registry.build_cfg(args.model, full=args.full,
                                     backend=args.backend,
                                     fused=not args.no_fuse,
                                     fuse_group=args.fuse_group_size)
-    modes = ("float", "int8") if args.mode == "both" else (args.mode,)
     all_stats = serve_model(cfg, requests=args.requests, buckets=buckets,
                             modes=modes, seed=args.seed, name=args.model,
                             devices=args.devices, mesh_shape=args.mesh,

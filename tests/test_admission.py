@@ -1,0 +1,284 @@
+"""Continuous-batching admission layer (`launch.admission`).
+
+Property-based (via tests/_hypothesis_compat.py) contract for the SLA
+bucket selector — never an infeasible bucket while a feasible one
+exists, smallest-bucket degradation otherwise, monotone in the budget —
+plus unit coverage of the open-stream machinery: the dispatch/complete
+split on `VisionServer`, queue-delay vs service-time accounting (no
+`restamp_queued` on the open path), EDF grouping with partial-bucket
+hold-back, per-model multiplexing weighted by queue depth,
+latency-path routing of deadline-pressed singles, and the Poisson /
+trace-file load generators the bench replays."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.launch import admission as adm
+from repro.launch.vision_serve import (InFlight, VisionServer,
+                                       build_edge_vit)
+from repro.models import vit
+
+
+# ---------------------------------------------------------------------------
+# select_bucket: the property-tested SLA contract
+# ---------------------------------------------------------------------------
+
+
+def _table(seed: int):
+    """A random measured-latency table: 1-4 buckets from {1,2,4,8,16},
+    latencies in (0.5, 50) ms — latency need NOT be monotone in bucket
+    size (real tables aren't always; the contract can't assume it)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 5))
+    buckets = rng.choice([1, 2, 4, 8, 16], size=n, replace=False)
+    return {int(b): float(rng.uniform(0.5, 50.0)) for b in buckets}
+
+
+@settings(max_examples=60)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=0.0, max_value=60.0))
+def test_select_bucket_feasible_and_degrade(seed, budget):
+    """Never an infeasible bucket when a feasible one exists (and then
+    the LARGEST feasible — throughput-greedy under the SLA); smallest
+    bucket when nothing fits."""
+    table = _table(seed)
+    choice = adm.select_bucket(budget, table)
+    assert choice in table
+    feasible = [b for b in table if table[b] <= budget]
+    if feasible:
+        assert table[choice] <= budget
+        assert choice == max(feasible)
+    else:
+        assert choice == min(table)
+
+
+@settings(max_examples=60)
+@given(st.integers(min_value=0, max_value=10_000),
+       st.floats(min_value=0.0, max_value=60.0),
+       st.floats(min_value=0.0, max_value=60.0))
+def test_select_bucket_monotone_in_budget(seed, a, b):
+    """A looser budget never selects a SMALLER bucket: the feasible set
+    only grows with the budget, so the throughput-greedy pick is
+    non-decreasing."""
+    lo, hi = sorted((a, b))
+    table = _table(seed)
+    assert (adm.select_bucket(lo, table) <=
+            adm.select_bucket(hi, table))
+
+
+def test_select_bucket_no_deadline_and_empty_table():
+    table = {1: 2.0, 4: 9.0, 8: 30.0}
+    assert adm.select_bucket(None, table) == 8       # no deadline
+    assert adm.select_bucket(float("inf"), table) == 8
+    assert adm.select_bucket(0.1, table) == 1        # nothing feasible
+    assert adm.select_bucket(10.0, table) == 4
+    with pytest.raises(ValueError):
+        adm.select_bucket(5.0, {})
+
+
+# ---------------------------------------------------------------------------
+# Open-stream serving on a tiny model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = build_edge_vit(image=16, patch=8, dim=48, heads=4, layers=2,
+                         n_classes=10)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    images = rng.standard_normal((8, cfg.image, cfg.image, 3)
+                                 ).astype(np.float32)
+    return cfg, params, images
+
+
+def test_dispatch_complete_split_and_time_accounting(tiny_setup):
+    """`dispatch` launches without blocking (t_start stamped, t_done
+    not); `complete` reaps; the submit->done span decomposes exactly
+    into queue delay + service time — no restamping needed."""
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(4,))
+    for im in images[:3]:
+        server.submit(im)
+    inflight = server.dispatch()
+    assert isinstance(inflight, InFlight)
+    assert not server.queue
+    assert all(r.t_start is not None and r.t_done is None
+               for r in inflight.requests)
+    served = server.complete(inflight)
+    assert served == 3
+    for r in inflight.requests:
+        assert r.t_done is not None and 0 <= r.pred < cfg.n_classes
+        assert r.queue_delay_s >= 0 and r.service_s > 0
+        assert r.latency_s == pytest.approx(
+            r.queue_delay_s + r.service_s, abs=1e-12)
+    assert server.dispatch() is None                 # empty queue
+
+
+def test_open_stream_serves_all_with_parity(tiny_setup):
+    """Every traced arrival completes through the admission layer with
+    the SAME logits the solo server produces, infeasible_served stays 0,
+    and the stats row carries the full open-stream schema."""
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    ctl = adm.AdmissionController({"edge": server},
+                                  latencies={"edge": {1: 1.0, 2: 1.2,
+                                                      4: 1.5}})
+    trace = adm.poisson_trace(2000.0, 16, "edge", sla_ms=200.0, seed=3,
+                              n_images=len(images))
+    stats = adm.run_open_stream(ctl, trace, {"edge": images})
+    assert stats["requests"] == 16
+    assert stats["infeasible_served"] == 0
+    assert stats["throughput_img_s"] > 0
+    for key in ("latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
+                "queue_delay_p50_ms", "service_p50_ms", "sla_miss_rate"):
+        assert key in stats
+    solo = VisionServer(cfg, params, mode="float", buckets=(1,))
+    solo.submit(images[0])
+    solo.run()
+    ref = solo.done[0].logits
+    # rids are assigned in submission (= trace) order, so zip pairs each
+    # completed request with its arrival
+    got = next(r for a, r in zip(trace, sorted(ctl.completed,
+                                               key=lambda r: r.rid))
+               if a.image_idx % len(images) == 0)
+    np.testing.assert_allclose(got.logits, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_multiplex_picks_deepest_queue(tiny_setup):
+    """Two model lanes on one mesh: the first dispatch goes to the lane
+    with the deeper queue (depth-weighted multiplexing)."""
+    cfg, params, images = tiny_setup
+    servers = {"a": VisionServer(cfg, params, mode="float", buckets=(4,)),
+               "b": VisionServer(cfg, params, mode="float", buckets=(4,))}
+    tables = {"a": {4: 1.0}, "b": {4: 1.0}}
+    ctl = adm.AdmissionController(servers, latencies=tables,
+                                  max_inflight=1)
+    ctl.submit("b", images[0])
+    for im in images[:4]:
+        ctl.submit("a", im)
+    ctl.step()
+    assert ctl.completed and all(r.model == "a" for r in ctl.completed)
+    ctl.drain()
+    assert sum(1 for r in ctl.completed if r.model == "b") == 1
+    per_model = ctl.stats(1.0)["per_model"]
+    assert per_model == {"a": 4, "b": 1}
+
+
+def test_partial_bucket_held_while_ring_busy(tiny_setup):
+    """A straggler that can't fill the bucket is HELD while an in-flight
+    batch executes (free on a serial device; late arrivals may still
+    fill it), then dispatched once the ring empties."""
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(4,))
+    ctl = adm.AdmissionController({"edge": server},
+                                  latencies={"edge": {4: 1.0}},
+                                  max_inflight=2)
+    for im in images[:5]:
+        ctl.submit("edge", im)
+    ctl.step()
+    assert len(ctl.completed) == 4       # the full bucket
+    assert ctl.held_partials >= 1        # the straggler waited
+    ctl.drain()
+    assert len(ctl.completed) == 5
+
+
+def test_latency_path_routes_deadline_pressed_single(tiny_setup):
+    """A single whose budget no throughput bucket can meet routes to the
+    dedicated batch=1 latency server (PR 8's 2-D mesh path in prod; any
+    batch=1 server here) and still completes with a valid prediction."""
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    lat_server = VisionServer(cfg, params, mode="float", buckets=(1,))
+    ctl = adm.AdmissionController(
+        {"edge": server},
+        latencies={"edge": {1: 500.0, 2: 600.0, 4: 700.0}},
+        latency_servers={"edge": lat_server})
+    req = ctl.submit("edge", images[0], sla_ms=100.0)
+    ctl.drain()
+    assert ctl.routed_latency_path == 1
+    assert req.path == "latency"
+    assert req.t_done is not None and 0 <= req.pred < cfg.n_classes
+    # the throughput server never saw it
+    assert not server.done and lat_server.done
+
+
+def test_measure_bucket_latencies_leaves_server_clean(tiny_setup):
+    cfg, params, _ = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 2))
+    table = adm.measure_bucket_latencies(server)
+    assert set(table) == {1, 2}
+    assert all(ms > 0 for ms in table.values())
+    assert not server.done and server.n_batches == 0
+
+
+# ---------------------------------------------------------------------------
+# Load generation + bench plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_deterministic_and_increasing():
+    a = adm.poisson_trace(100.0, 32, "m", sla_ms=10.0, seed=7)
+    b = adm.poisson_trace(100.0, 32, "m", sla_ms=10.0, seed=7)
+    assert a == b
+    assert all(x.t < y.t for x, y in zip(a, a[1:]))
+    assert all(x.sla_ms == 10.0 and x.model == "m" for x in a)
+    multi = adm.poisson_trace(100.0, 64, ("m1", "m2"), seed=7)
+    assert {x.model for x in multi} == {"m1", "m2"}
+
+
+def test_load_trace_parses_and_sorts(tmp_path):
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps({"arrivals": [
+        {"t": 0.5, "model": "b"},
+        {"t": 0.1, "sla_ms": 5.0},
+    ]}))
+    trace = adm.load_trace(str(path), "a", default_sla_ms=20.0)
+    assert [x.t for x in trace] == [0.1, 0.5]
+    assert trace[0].model == "a" and trace[0].sla_ms == 5.0
+    assert trace[1].model == "b" and trace[1].sla_ms == 20.0
+
+
+def test_latency_table_from_bench_filters_rows():
+    """Only fused throughput drains of the right mesh feed the table —
+    latency-path and open-stream load rows are other experiments."""
+    record = {"runs": [
+        {"model": "m", "mode": "float", "batch": 4, "fused": True,
+         "wall_s": 0.4, "batches": 100, "mesh_shape": "1x1"},
+        {"model": "m", "mode": "float", "batch": 4, "fused": True,
+         "wall_s": 0.2, "batches": 100},               # faster: kept
+        {"model": "m", "mode": "float", "batch": 1, "fused": True,
+         "wall_s": 0.1, "batches": 100},
+        {"model": "m", "mode": "float", "batch": 1, "fused": True,
+         "wall_s": 0.01, "batches": 100, "latency_path": True},
+        {"model": "m", "mode": "float", "batch": 4, "fused": True,
+         "wall_s": 0.01, "batches": 100, "load_path": True,
+         "serving": "continuous"},
+        {"model": "m", "mode": "int8", "batch": 4, "fused": True,
+         "wall_s": 0.9, "batches": 100},
+        {"model": "m", "mode": "float", "batch": 4, "fused": False,
+         "wall_s": 0.01, "batches": 100},
+    ]}
+    table = adm.latency_table_from_bench(record, "m", "float")
+    assert table == {4: pytest.approx(2.0), 1: pytest.approx(1.0)}
+
+
+def test_stream_summary_empty_schema():
+    s = adm.stream_summary([], 1.0)
+    assert s["requests"] == 0 and s["throughput_img_s"] == 0.0
+    assert s["sla_miss_rate"] == 0.0 and s["latency_p99_ms"] == 0.0
+
+
+def test_run_drain_stream_baseline(tiny_setup):
+    cfg, params, images = tiny_setup
+    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    trace = adm.poisson_trace(2000.0, 8, "edge", sla_ms=500.0, seed=1,
+                              n_images=len(images))
+    stats = adm.run_drain_stream(server, trace, {"edge": images})
+    assert stats["requests"] == 8
+    assert stats["throughput_img_s"] > 0
+    assert "queue_delay_p50_ms" in stats

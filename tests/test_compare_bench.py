@@ -2,7 +2,8 @@
 ``--max-regression`` exit 3 (CI warns, non-blocking), tool crashes exit 2
 (CI fails — no more ``|| true`` swallowing both), clean compares exit 0;
 rows join on (model, mode, batch, fused, group_size, devices,
-mesh_shape)."""
+mesh_shape, latency_path, serving, arrival_rate, sla_ms) — the last
+three identify Poisson open-stream load rows."""
 
 import json
 import os
@@ -133,6 +134,60 @@ def test_rows_join_on_mesh_shape(tmp_path):
     assert rc == 0, out        # only the 8x1 throughput row joined
     assert "1 joined rows" in out
     assert "only in candidate" in out
+
+
+def _load_row(serving="continuous", rate=1000.0, sla=100.0, thr=500.0,
+              p50=5.0, p99=15.0):
+    r = _row(thr=thr, p50=p50)
+    del r["fusion_speedup"]
+    r.update({"load_path": True, "serving": serving,
+              "arrival_rate": rate, "sla_ms": sla,
+              "latency_p99_ms": p99})
+    return r
+
+
+def test_load_rows_join_on_serving_rate_sla(tmp_path):
+    """Poisson load rows join on (serving, arrival_rate, sla_ms): the
+    continuous and drain rows of one cell never compare against each
+    other, nor against a different rate/SLA tier, nor against the plain
+    drain-sweep row of the same (model, mode, batch); pre-admission
+    baselines (no load rows) leave them unjoined."""
+    base = _write(tmp_path, "base.json", [
+        _row(thr=100.0),                                  # drain sweep
+        _load_row("continuous", 1000.0, 100.0, thr=500.0),
+        _load_row("drain", 1000.0, 100.0, thr=400.0),
+        _load_row("continuous", 250.0, 8.0, thr=10.0),
+    ])
+    cand = _write(tmp_path, "cand.json", [
+        _row(thr=100.0),
+        _load_row("continuous", 1000.0, 100.0, thr=505.0),
+        _load_row("drain", 1000.0, 100.0, thr=10.0),      # -97.5%
+        _load_row("continuous", 500.0, 100.0, thr=500.0),  # other rate
+    ])
+    rc, out = _run(base, cand)
+    assert rc == 0, out
+    assert "3 joined rows" in out          # sweep + continuous + drain
+    assert "only in baseline" in out and "only in candidate" in out
+    # the drain load row's collapse trips the gate — load rows
+    # participate in the regression contract like any other row
+    rc, out = _run(base, cand, "--max-regression", "25")
+    assert rc == 3, out
+    assert "REGRESSION" in out
+
+
+def test_p99_column_and_load_tag(tmp_path):
+    """Joined rows print old/new p99 alongside p50, and load rows are
+    tagged serving@rate/sla in the load column."""
+    base = _write(tmp_path, "base.json",
+                  [_load_row("continuous", 1000.0, 100.0, p99=20.0)])
+    cand = _write(tmp_path, "cand.json",
+                  [_load_row("continuous", 1000.0, 100.0, p99=10.0)])
+    rc, out = _run(base, cand)
+    assert rc == 0, out
+    assert "p99 old" in out and "p99 new" in out
+    assert "conti@1000/100" in out
+    row = next(ln for ln in out.splitlines() if "conti@" in ln)
+    assert "20.00" in row and "10.00" in row and "-50.0" in row
 
 
 def test_fusion_speedup_diff_column(tmp_path):

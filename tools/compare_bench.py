@@ -2,14 +2,17 @@
 """Diff two BENCH_vision_serve.json files (baseline vs candidate).
 
 Joins bench rows on (model, mode, batch, fused, group_size, devices,
-mesh_shape) — ``group_size`` is 1 on unfused/per-layer rows and the
-megakernel size on layer-group rows (absent in pre-grouping files:
-joined as 1); ``mesh_shape`` is the ``"DxM"`` (data, model) mesh of
-sharded rows (absent in pre-2-D-mesh files: joined as
-``"{devices}x1"``, which is what those rows were) — and prints
-per-row throughput / p50 / p99 deltas plus a per-model summary (including
-the recorded fusion_speedup movement), flagging rows that appear in only
-one file.  Intended uses:
+mesh_shape, latency_path, serving, arrival_rate, sla_ms) — ``group_size``
+is 1 on unfused/per-layer rows and the megakernel size on layer-group
+rows (absent in pre-grouping files: joined as 1); ``mesh_shape`` is the
+``"DxM"`` (data, model) mesh of sharded rows (absent in pre-2-D-mesh
+files: joined as ``"{devices}x1"``, which is what those rows were);
+``serving``/``arrival_rate``/``sla_ms`` identify the Poisson open-stream
+load rows (continuous-batching admission layer vs drain baseline at a
+fixed offered load; absent on drain-sweep rows and in pre-load files:
+joined as ``""``/0/0) — and prints per-row throughput / p50 / p99 deltas
+plus a per-model summary (including the recorded fusion_speedup
+movement), flagging rows that appear in only one file.  Intended uses:
 
   * CI: report of the PR's bench against the committed baseline
     (`.github/workflows/ci.yml` snapshots the checked-in JSON before the
@@ -37,7 +40,7 @@ import json
 import sys
 from typing import Dict, Tuple
 
-Key = Tuple[str, str, int, bool, int, int, str, bool]
+Key = Tuple[str, str, int, bool, int, int, str, bool, str, float, float]
 
 REGRESSION_EXIT = 3
 CRASH_EXIT = 2
@@ -54,12 +57,17 @@ def load_rows(path: str) -> Dict[Key, dict]:
         # pre-grouping files have no "group_size": per-layer rows, 1;
         # pre-2-D-mesh files have no "mesh_shape": their sharded rows
         # were 1-D data meshes, "{devices}x1", and no "latency_path":
-        # every row was a queue-drain throughput row
+        # every row was a queue-drain throughput row; pre-admission files
+        # have no "serving"/"arrival_rate"/"sla_ms": closed-list drains,
+        # joined as ""/0/0
         devices = int(r.get("devices", 1))
         key = (r["model"], r["mode"], int(r.get("batch", 0)),
                bool(r.get("fused", False)), int(r.get("group_size", 1)),
                devices, str(r.get("mesh_shape", f"{devices}x1")),
-               bool(r.get("latency_path", False)))
+               bool(r.get("latency_path", False)),
+               str(r.get("serving", "") or ""),
+               float(r.get("arrival_rate", 0.0) or 0.0),
+               float(r.get("sla_ms", 0.0) or 0.0))
         rows[key] = r
     return rows
 
@@ -76,9 +84,10 @@ def compare(args) -> int:
     only_cand = sorted(set(cand) - set(base))
 
     hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
-           f"{'grp':>3} {'mesh':>5} {'img/s old':>10} {'img/s new':>10} "
-           f"{'Δthr%':>7} "
-           f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7} {'fus_spd':>14}")
+           f"{'grp':>3} {'mesh':>5} {'load':>15} "
+           f"{'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
+           f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7} "
+           f"{'p99 old':>8} {'p99 new':>8} {'Δp99%':>7} {'fus_spd':>14}")
     print(f"[compare-bench] {args.baseline} -> {args.candidate}: "
           f"{len(joined)} joined rows")
     print(hdr)
@@ -88,9 +97,14 @@ def compare(args) -> int:
         b, c = base[key], cand[key]
         dthr = _pct(c["throughput_img_s"], b["throughput_img_s"])
         dp50 = _pct(c["latency_p50_ms"], b["latency_p50_ms"])
+        bp99 = b.get("latency_p99_ms", 0.0)
+        cp99 = c.get("latency_p99_ms", 0.0)
+        dp99 = _pct(cp99, bp99)
         worst = min(worst, dthr)
         (model, mode, batch, fused, group_size, devices, mesh_shape,
-         latency_path) = key
+         latency_path, serving, arrival_rate, sla_ms) = key
+        load = (f"{serving[:5]}@{arrival_rate:g}/{sla_ms:g}" if serving
+                else "")
         # fusion_speedup lives on the fused row of each A/B pair only
         # (post-observability schema; older files duplicated it — either
         # way it only ever appears on rows where both sides carry it)
@@ -105,10 +119,12 @@ def compare(args) -> int:
               f"{'fused' if fused else 'unfused':<7} "
               f"{group_size:>3} "
               f"{mesh_shape + ('L' if latency_path else ''):>5} "
+              f"{load:>15} "
               f"{b['throughput_img_s']:>10.1f} "
               f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "
               f"{b['latency_p50_ms']:>8.2f} {c['latency_p50_ms']:>8.2f} "
-              f"{dp50:>+7.1f} {fs:>14}")
+              f"{dp50:>+7.1f} "
+              f"{bp99:>8.2f} {cp99:>8.2f} {dp99:>+7.1f} {fs:>14}")
 
     models = sorted({k[0] for k in joined})
     for m in models:
