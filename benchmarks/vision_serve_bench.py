@@ -83,11 +83,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 import jax                                                   # noqa: E402
 import numpy as np                                           # noqa: E402
 
+from repro.core import benchkey                              # noqa: E402
 from repro.core.perfmodel import (fusion_speedup_model,      # noqa: E402
                                   grouping_speedup_model)
 from repro.core.quant import ptq_tolerance                   # noqa: E402
 from repro.launch import admission as adm                    # noqa: E402
-from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
+from repro.launch.vision_serve import (ServeConfig,          # noqa: E402
+                                       VisionServer, calibrate)
 from repro.models import vision_registry                     # noqa: E402
 
 OUT_PATH = os.path.join("results", "BENCH_vision_serve.json")
@@ -228,9 +230,9 @@ def _load_cells(name: str, cfg, params, qparams, cal,
     n_tight = max(load_requests // 2, 8)
     banks = {name: images}
     for mode in ("float", "int8"):
-        server = VisionServer(cfg, params, qparams=qparams,
-                              calibrator=cal, mode=mode,
-                              buckets=tuple(batches))
+        server = VisionServer(
+            cfg, params, qparams=qparams, calibrator=cal,
+            serve_cfg=ServeConfig(mode=mode, buckets=tuple(batches)))
         probed = adm.measure_bucket_latencies(server)  # warms every bucket
         table = {b: svc_ms.get((mode, b), probed[b]) for b in batches}
         rate = LOAD_RATES.get((name, mode))
@@ -357,10 +359,9 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
             for variant, _, _ in variants:
                 if variant == "grouped" and not grouping_active:
                     continue
-                server = VisionServer(cfgs[variant], params,
-                                      qparams=qparams,
-                                      calibrator=cal, mode=mode,
-                                      buckets=(batch,))
+                server = VisionServer(
+                    cfgs[variant], params, qparams=qparams, calibrator=cal,
+                    serve_cfg=ServeConfig(mode=mode, buckets=(batch,)))
                 server.submit_many(images)
                 server.step()              # compile warm-up drain
                 server.restamp_queued()
@@ -494,11 +495,10 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
             sharded_variants.append(("grouped", group_size))
         for variant, gs in sharded_variants:
             for mode in ("float", "int8"):
-                server = VisionServer(cfgs[variant], params,
-                                      qparams=qparams,
-                                      calibrator=cal, mode=mode,
-                                      buckets=(batch,),
-                                      mesh_shape=shape_str)
+                server = VisionServer(
+                    cfgs[variant], params, qparams=qparams, calibrator=cal,
+                    serve_cfg=ServeConfig(mode=mode, buckets=(batch,),
+                                          mesh_shape=shape_str))
                 server.submit_many(images)
                 server.run()                 # compile warm-up drain
                 done = sorted(server.done, key=lambda r: r.rid)
@@ -531,9 +531,10 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
         # rows exist to beat (tests/test_bench_decisions.py tracks who
         # actually wins per model).
         for mode in ("float", "int8"):
-            server = VisionServer(cfgs["fused"], params, qparams=qparams,
-                                  calibrator=cal, mode=mode,
-                                  buckets=(1,), mesh_shape=shape_str)
+            server = VisionServer(
+                cfgs["fused"], params, qparams=qparams, calibrator=cal,
+                serve_cfg=ServeConfig(mode=mode, buckets=(1,),
+                                      mesh_shape=shape_str))
             stats, b1 = _batch1_latency_drain(server, images, repeats)
             errs[("b1_fused", mode)] = float(
                 np.abs(b1 - logits[(mode, 1, "fused")]).max())
@@ -580,6 +581,57 @@ def bench_model(name: str, *, requests: int, batches, repeats: int,
     return rows, ptq, fusion, sharded, load_gates
 
 
+def _max_heads(cfg) -> int:
+    """Widest layer of the config: the sweep's upper bound (per-stage
+    Swin configs clip each stage to its own head count)."""
+    heads = getattr(cfg, "heads")
+    return max(heads) if isinstance(heads, tuple) else int(heads)
+
+
+def head_sweep_model(name: str, *, requests: int, batches, repeats: int,
+                     seed: int = 0):
+    """Pruning sweep (``--head-sweep``): serve ``name`` at every uniform
+    surviving-head count k = 1..H (`vision_registry.uniform_head_mask`;
+    Swin stages clip to min(k, stage_heads), TNT masks the outer stream)
+    and record throughput vs. k.  One fused drain row per (mode, k) with
+    ``heads: k`` in the join key (`repro.core.benchkey`); the dense
+    model is the k = H endpoint, so each model's curve shares its
+    rightmost point with the regular bench rows."""
+    base = vision_registry.build_cfg(name, fused=True)
+    batch = max(batches)
+    rng = np.random.default_rng(seed)
+    images = rng.standard_normal(
+        (requests, base.image, base.image, 3)).astype(np.float32)
+    rows = []
+    for k in range(1, _max_heads(base) + 1):
+        mask = vision_registry.uniform_head_mask(base, k)
+        cfg = vision_registry.build_cfg(name, fused=True, head_mask=mask)
+        params = vision_registry.init_params(jax.random.PRNGKey(seed), cfg)
+        qparams = vision_registry.quantize(params)
+        cal = calibrate(qparams, cfg, images[:max(requests // 2, 1)])
+        for mode in ("float", "int8"):
+            server = VisionServer(
+                cfg, params, qparams=qparams, calibrator=cal,
+                serve_cfg=ServeConfig(mode=mode, buckets=(batch,)),
+                model_name=name)
+            server.submit_many(images)
+            server.step()                    # compile warm-up drain
+            server.restamp_queued()
+            server.run()
+            stats = _timed_ab_drains({"swept": server}, images,
+                                     repeats)["swept"]
+            stats.update({"model": name, "config": cfg.name,
+                          "batch": batch, "fused": True, "group_size": 1,
+                          "device_count": jax.device_count(),
+                          "heads": k, "head_sweep": True})
+            rows.append(stats)
+            print(f"vision_serve.{name}.{mode}.b{batch}.heads{k},"
+                  f"{stats['wall_s'] / max(stats['requests'], 1) * 1e6:.0f},"
+                  f"img_per_s={stats['throughput_img_s']:.1f} "
+                  f"p50_ms={stats['latency_p50_ms']:.1f}")
+    return rows
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(prog="vision_serve_bench")
     ap.add_argument("--smoke", action="store_true",
@@ -605,6 +657,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--load-only", action="store_true",
                     help="run ONLY the Poisson load cells (CI load smoke "
                          "leg): skips drain/sharded rows and their gates")
+    ap.add_argument("--head-sweep", action="store_true",
+                    help="run ONLY the pruning sweep: serve each model at "
+                         "every uniform surviving-head count 1..H and "
+                         "record throughput vs. heads (pruned *_p "
+                         "registry variants are skipped by default — "
+                         "the sweep masks the dense base directly)")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args(argv)
     if args.fuse_group_size < 2:
@@ -623,6 +681,44 @@ def main(argv=None) -> dict:
     batches = (1, 4) if args.smoke else (1, 8)
     load_requests = (args.load_requests if args.load_requests is not None
                      else (64 if args.smoke else 96))
+
+    if args.head_sweep:
+        # masking the dense base covers the *_p variants' geometry; keep
+        # them only when explicitly asked for via --models
+        sweep_models = ([m for m in models if not m.endswith("_p")]
+                        if args.models is None else models)
+        runs = []
+        for name in sweep_models:
+            runs.extend(head_sweep_model(
+                name, requests=requests, batches=batches,
+                repeats=args.repeats))
+        runs.sort(key=benchkey.row_key)
+        record = {"bench": "vision_serve_head_sweep", "smoke": args.smoke,
+                  "models": sweep_models, "requests_per_run": requests,
+                  "batches": list(batches), "repeats": args.repeats,
+                  "device_count": jax.device_count(), "runs": runs}
+        out = args.out if args.out != OUT_PATH else os.path.join(
+            "results", "BENCH_vision_head_sweep.json")
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"[vision-serve-bench] wrote {out}")
+        # monotone-coverage gate: every surviving-head count 1..H must be
+        # present for every swept model x mode — a hole means a pruned
+        # config failed to build or serve
+        missing = []
+        for name in sweep_models:
+            hmax = _max_heads(vision_registry.build_cfg(name))
+            for mode in ("float", "int8"):
+                have = {r["heads"] for r in runs
+                        if r["model"] == name and r["mode"] == mode}
+                missing += [f"{name} [{mode}, heads={k}]"
+                            for k in range(1, hmax + 1) if k not in have]
+        if missing:
+            raise SystemExit(
+                f"[vision-serve-bench] head-sweep coverage gate failed: "
+                f"missing rows for {', '.join(missing)}")
+        return record
 
     runs, ptq_parities, fusion_parities, sharded_parities = [], [], [], []
     load_gates = []
@@ -646,16 +742,9 @@ def main(argv=None) -> dict:
         load_gates.extend(gates)
 
     # Deterministic row order regardless of sweep/insertion order, so JSON
-    # diffs (tools/compare_bench.py) are stable across runs.
-    runs.sort(key=lambda r: (r["model"], r["mode"], r["batch"],
-                             not r["fused"], r.get("group_size", 1),
-                             r.get("devices", 1),
-                             r.get("mesh_shape", "1x1"),
-                             bool(r.get("latency_path", False)),
-                             bool(r.get("load_path", False)),
-                             r.get("serving", ""),
-                             float(r.get("arrival_rate", 0.0) or 0.0),
-                             float(r.get("sla_ms", 0.0) or 0.0)))
+    # diffs (tools/compare_bench.py) are stable across runs — sorted by
+    # the SAME join key compare_bench joins on (repro.core.benchkey).
+    runs.sort(key=benchkey.row_key)
     record = {"bench": "vision_serve", "smoke": args.smoke,
               "models": models, "requests_per_run": requests,
               "batches": list(batches), "repeats": args.repeats,

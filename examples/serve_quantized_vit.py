@@ -29,7 +29,8 @@ sys.path.insert(0, "src")
 
 from repro.core import perfmodel as pm                      # noqa: E402
 from repro.data import SyntheticImages                      # noqa: E402
-from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
+from repro.launch.vision_serve import (ServeConfig,         # noqa: E402
+                                       VisionServer, calibrate)
 from repro.models import vision_registry, vit               # noqa: E402
 from repro.optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
 
@@ -71,8 +72,10 @@ def main():
 
     results = {}
     for mode in ("float", "int8"):
-        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                              mode=mode, buckets=(1, 2, 4, 8, 16, 32))
+        server = VisionServer(
+            cfg, params, qparams=qparams, calibrator=cal,
+            serve_cfg=ServeConfig(mode=mode,
+                                  buckets=(1, 2, 4, 8, 16, 32)))
         server.submit_many(imgs)
         stats = server.run()
         results[mode] = (stats, np.asarray([r.pred for r in server.done]))

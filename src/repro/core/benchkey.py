@@ -1,0 +1,51 @@
+"""The canonical bench-row join key.
+
+`benchmarks/vision_serve_bench.py` emits rows and `tools/compare_bench.py`
+joins two result files; both must agree on what identifies a run.  That
+contract lives HERE — one field list, one key function — instead of two
+hand-maintained copies drifting apart.
+
+A row is identified by every axis the bench sweeps:
+
+  model, mode, batch            — which cell
+  fused, group_size             — executor variant (unfused/fused/grouped)
+  devices, mesh_shape           — placement
+  latency_path                  — batch-1 2-D (data, model) mesh rows
+  serving, arrival_rate, sla_ms — open-stream (continuous-batching) rows
+  heads                         — surviving-head count on --head-sweep rows
+
+Older result files predate some axes; `row_key` fills the same defaults
+the tools always applied, so cross-version diffs keep joining: pre-fusion
+rows are the per-phase executor (fused=False), pre-grouping rows are
+per-layer (group_size=1), pre-sharding rows are single-device, pre-2-D
+mesh rows were 1-D data meshes ("{devices}x1", latency_path=False),
+pre-admission rows were closed-list drains (serving=""/0/0), and
+pre-pruning rows are dense (heads=0, meaning "architectural").
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+# Ordered join-key fields — the single source of truth for both tools.
+ROW_FIELDS: Tuple[str, ...] = (
+    "model", "mode", "batch", "fused", "group_size", "devices",
+    "mesh_shape", "latency_path", "serving", "arrival_rate", "sla_ms",
+    "heads",
+)
+
+Key = Tuple[str, str, int, bool, int, int, str, bool, str, float, float,
+            int]
+
+
+def row_key(row: Dict[str, Any]) -> Key:
+    """Join key for one bench-row dict (axes listed in ROW_FIELDS)."""
+    devices = int(row.get("devices", 1))
+    return (str(row["model"]), str(row["mode"]), int(row.get("batch", 0)),
+            bool(row.get("fused", False)), int(row.get("group_size", 1)),
+            devices, str(row.get("mesh_shape", f"{devices}x1")),
+            bool(row.get("latency_path", False)),
+            str(row.get("serving", "") or ""),
+            float(row.get("arrival_rate", 0.0) or 0.0),
+            float(row.get("sla_ms", 0.0) or 0.0),
+            int(row.get("heads", 0) or 0))

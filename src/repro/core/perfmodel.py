@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Hardware description
@@ -93,10 +93,27 @@ class StageSpec:
     inner_dim: int = 0            # TNT pixel-embedding channels c
     inner_heads: int = 0          # TNT inner-MSA heads
     inner_mlp_ratio: float = 4.0  # TNT inner-MLP expansion
+    # Per-layer head-pruning mask: ``head_mask[layer][head]`` is 1 to keep
+    # the head, 0 to drop it (canonical nested-tuple form of
+    # `models.config.normalize_head_mask`).  ``heads`` stays the
+    # ARCHITECTURAL count (head_dim never changes under pruning); the
+    # surviving count per layer is `layer_heads`.  None = dense.
+    head_mask: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     @property
     def head_dim(self) -> int:
         return self.dim // self.heads
+
+    def layer_heads(self, layer: int) -> int:
+        """Surviving MSA heads of one layer (== ``heads`` when dense)."""
+        if not self.head_mask:
+            return self.heads
+        return int(sum(self.head_mask[layer]))
+
+    @property
+    def head_counts(self) -> Tuple[int, ...]:
+        """Surviving head count per layer, in layer order."""
+        return tuple(self.layer_heads(i) for i in range(self.layers))
 
     @property
     def mlp_hidden(self) -> int:
@@ -225,10 +242,15 @@ class MacBreakdown:
         }
 
 
-def stage_msa_macs(s: StageSpec) -> int:
-    """MSA MACs for one layer of a stage: QKV + QK^T + SV + concat."""
-    n, d = s.tokens, s.dim
-    per_window = 3 * n * d * d + 2 * n * n * d + n * d * d
+def stage_msa_macs(s: StageSpec, k: Optional[int] = None) -> int:
+    """MSA MACs for one layer of a stage: QKV + QK^T + SV + concat.
+
+    ``k`` is the surviving head count of the layer (default: dense);
+    head_dim is architectural, so QKV/attention scale linearly in k and
+    the concat contraction narrows to ``k * head_dim``."""
+    n, d, dh = s.tokens, s.dim, s.head_dim
+    k = s.heads if k is None else k
+    per_window = (3 * n * d * dh + 2 * n * n * dh) * k + n * (k * dh) * d
     return per_window * s.n_windows
 
 
@@ -270,7 +292,8 @@ def count_macs(m: VisionModelSpec) -> MacBreakdown:
     h, w, c = m.image
     b.patch_embed = m.patch_tokens * (c * m.patch * m.patch) * m.embed_dim
     for s in m.stages:
-        b.msa += s.layers * (stage_msa_macs(s) + stage_inner_msa_macs(s))
+        b.msa += sum(stage_msa_macs(s, k) for k in s.head_counts) \
+            + s.layers * stage_inner_msa_macs(s)
         b.mlp += s.layers * (stage_mlp_macs(s) + stage_inner_mlp_macs(s))
         b.patch_merging += stage_patch_merging_macs(s)
     return b
@@ -332,9 +355,16 @@ def _gemm_cycles_rowcol(rows: int, contract: int, cols: int,
     return float(row_passes) * float(col_groups) * float(contract)
 
 
-def msa_phase(hw: VitaHW, s: StageSpec) -> List[PhaseCycles]:
-    """Head-pipelined MSA (Fig. 4) for one layer of a stage."""
-    n, d, dh, k = s.tokens, s.dim, s.head_dim, s.heads
+def msa_phase(hw: VitaHW, s: StageSpec,
+              k: Optional[int] = None) -> List[PhaseCycles]:
+    """Head-pipelined MSA (Fig. 4) for one layer of a stage.
+
+    ``k`` overrides the head count for head-pruned layers: the head
+    pipeline runs k iterations and the concat projection contracts over
+    the surviving ``k * head_dim`` columns only (the width the executor's
+    sliced ``w_msa`` actually has)."""
+    n, d, dh = s.tokens, s.dim, s.head_dim
+    k = s.heads if k is None else k
     # ---- Engine 1: Q, K, V for one head.  PE blocks 1..3 each handle one of
     # Q/K/V (same shape) -> per-block GEMM (n x d) @ (d x dh).
     e1 = _gemm_cycles_rowcol(n, d, dh, hw.k1, hw.k2, 1)
@@ -353,15 +383,15 @@ def msa_phase(hw: VitaHW, s: StageSpec) -> List[PhaseCycles]:
     wbytes = float(k * 3 * d * dh)
     phases = [PhaseCycles("msa_heads", msa_core * s.n_windows,
                           useful * s.n_windows, wbytes)]
-    # ---- Concat projection W^msa (n x d) @ (d x d), all blocks reused.
-    total_blocks_cols = hw.k2 * hw.n_blocks_e1
-    cc = _gemm_cycles_rowcol(n, d, d, hw.k1, hw.k2, hw.n_blocks_e1)
+    # ---- Concat projection W^msa (n x k*dh) @ (k*dh x d), all blocks
+    # reused; pruned layers contract only the surviving concat width.
+    cc = _gemm_cycles_rowcol(n, k * dh, d, hw.k1, hw.k2, hw.n_blocks_e1)
     # Engine-2 blocks help with a proportional share (paper: "reuse the same
     # PE blocks"): scale cycles by MAC share actually usable.
     cc = cc * (hw.e1_macs / hw.total_macs)
     phases.append(PhaseCycles("msa_concat", cc * s.n_windows,
-                              float(n * d * d) * s.n_windows,
-                              float(d * d)))
+                              float(n * k * dh * d) * s.n_windows,
+                              float(k * dh * d)))
     return phases
 
 
@@ -439,16 +469,14 @@ def analyze(m: VisionModelSpec, hw: Optional[VitaHW] = None) -> PerfReport:
     hw = hw or VitaHW()
     phases: List[PhaseCycles] = [patch_embed_phase(hw, m)]
     for s in m.stages:
-        layer_phases: List[PhaseCycles] = []
-        if s.inner_tokens:                 # TNT: inner blocks + fold first
-            inn = inner_stage(s)
-            layer_phases += msa_phase(hw, inn) + [mlp_phase(hw, inn),
-                                                  aux_phase(hw, inn),
-                                                  fold_phase(hw, s)]
-        layer_phases += msa_phase(hw, s) + [mlp_phase(hw, s),
-                                            aux_phase(hw, s)]
-        for _ in range(s.layers):
-            phases.extend(dataclasses.replace(p) for p in layer_phases)
+        for li in range(s.layers):
+            if s.inner_tokens:             # TNT: inner blocks + fold first
+                inn = inner_stage(s)
+                phases.extend(msa_phase(hw, inn))
+                phases.extend([mlp_phase(hw, inn), aux_phase(hw, inn),
+                               fold_phase(hw, s)])
+            phases.extend(msa_phase(hw, s, s.layer_heads(li)))
+            phases.extend([mlp_phase(hw, s), aux_phase(hw, s)])
         if s.patch_merging:
             phases.append(patch_merging_phase(hw, s))
     # Bandwidth stalls: weights stream during compute; stall if a phase needs
@@ -525,6 +553,22 @@ def stage_groupable(s: StageSpec) -> bool:
     return s.layers > 1 and not s.inner_tokens and s.n_windows == 1
 
 
+def head_segments(counts: Sequence[int]) -> List[int]:
+    """Lengths of the maximal runs of equal surviving-head counts — the
+    exact boundaries `fuse_schedule`'s grouping pass splits layer groups
+    at (`_groupable` requires equal ``Phase.heads``), so the grouping
+    plan of a ragged stage is per-segment, not per-stage."""
+    segs: List[int] = []
+    last = None
+    for c in counts:
+        if segs and c == last:
+            segs[-1] += 1
+        else:
+            segs.append(1)
+        last = c
+    return segs
+
+
 def _stage_group_plan(layers: int, group_size: int):
     """(layers_in_groups, plain_layers, n_launches) for one groupable
     stage chunked greedily into groups of at most ``group_size`` — the
@@ -566,20 +610,27 @@ def expected_phase_cycles(m: VisionModelSpec,
         out[kind] = out.get(kind, 0.0) + float(cycles)
 
     def add_pair(kind_msa: str, kind_mlp: str, kind_layer: str,
-                 msa_c: float, mlp_c: float, aux_c: float, bnd: float,
-                 layers: int, groupable: bool = False) -> None:
+                 msa_cs: Sequence[float], mlp_c: float, aux_c: float,
+                 bnd: float, groupable: bool = False) -> None:
+        # ``msa_cs`` is per-layer (head pruning makes layers unequal);
+        # grouping chunks per equal-head segment, mirroring `_groupable`.
+        layers = len(msa_cs)
         if fused:
-            per_layer = msa_c + mlp_c + aux_c
+            per_layer = [mc + mlp_c + aux_c for mc in msa_cs]
             if groupable and group_size > 1:
-                grouped, plain, _ = _stage_group_plan(layers, group_size)
-                if grouped:
-                    add(kind_layer + "_group", per_layer * grouped)
-                if plain:
-                    add(kind_layer, per_layer * plain)
+                i = 0
+                for seg in head_segments(msa_cs):
+                    grouped, plain, _ = _stage_group_plan(seg, group_size)
+                    if grouped:
+                        add(kind_layer + "_group",
+                            per_layer[i] * grouped)
+                    if plain:
+                        add(kind_layer, per_layer[i] * plain)
+                    i += seg
             else:
-                add(kind_layer, per_layer * layers)
+                add(kind_layer, sum(per_layer))
         else:
-            add(kind_msa, (msa_c + aux_c / 2 + bnd / 2) * layers)
+            add(kind_msa, sum(msa_cs) + (aux_c / 2 + bnd / 2) * layers)
             add(kind_mlp, (mlp_c + aux_c / 2 + bnd / 2) * layers)
 
     add("embed", patch_embed_phase(hw, m).cycles)
@@ -587,14 +638,15 @@ def expected_phase_cycles(m: VisionModelSpec,
         if s.inner_tokens:
             inn = inner_stage(s)
             add_pair("inner_msa", "inner_mlp", "inner_layer",
-                     sum(p.cycles for p in msa_phase(hw, inn)),
+                     [sum(p.cycles for p in msa_phase(hw, inn))] * s.layers,
                      mlp_phase(hw, inn).cycles, aux_phase(hw, inn).cycles,
-                     phase_boundary_cycles(hw, s, inner=True), s.layers)
+                     phase_boundary_cycles(hw, s, inner=True))
             add("fold", fold_phase(hw, s).cycles * s.layers)
         add_pair("msa", "mlp", "layer",
-                 sum(p.cycles for p in msa_phase(hw, s)),
+                 [sum(p.cycles for p in msa_phase(hw, s, k))
+                  for k in s.head_counts],
                  mlp_phase(hw, s).cycles, aux_phase(hw, s).cycles,
-                 phase_boundary_cycles(hw, s), s.layers,
+                 phase_boundary_cycles(hw, s),
                  groupable=stage_groupable(s))
         if s.patch_merging:
             add("merge", patch_merging_phase(hw, s).cycles)
@@ -624,20 +676,25 @@ def expected_phase_macs(m: VisionModelSpec,
         out[kind] = out.get(kind, 0.0) + float(macs)
 
     def add_pair(kind_msa: str, kind_mlp: str, kind_layer: str,
-                 msa_m: float, mlp_m: float, layers: int,
+                 msa_ms: Sequence[float], mlp_m: float,
                  groupable: bool = False) -> None:
+        layers = len(msa_ms)
         if fused:
-            per_layer = msa_m + mlp_m
+            per_layer = [mm + mlp_m for mm in msa_ms]
             if groupable and group_size > 1:
-                grouped, plain, _ = _stage_group_plan(layers, group_size)
-                if grouped:
-                    add(kind_layer + "_group", per_layer * grouped)
-                if plain:
-                    add(kind_layer, per_layer * plain)
+                i = 0
+                for seg in head_segments(msa_ms):
+                    grouped, plain, _ = _stage_group_plan(seg, group_size)
+                    if grouped:
+                        add(kind_layer + "_group",
+                            per_layer[i] * grouped)
+                    if plain:
+                        add(kind_layer, per_layer[i] * plain)
+                    i += seg
             else:
-                add(kind_layer, per_layer * layers)
+                add(kind_layer, sum(per_layer))
         else:
-            add(kind_msa, msa_m * layers)
+            add(kind_msa, sum(msa_ms))
             add(kind_mlp, mlp_m * layers)
 
     add("embed", patch_embed_phase(hw, m).useful_macs)
@@ -645,12 +702,14 @@ def expected_phase_macs(m: VisionModelSpec,
         if s.inner_tokens:
             inn = inner_stage(s)
             add_pair("inner_msa", "inner_mlp", "inner_layer",
-                     sum(p.useful_macs for p in msa_phase(hw, inn)),
-                     mlp_phase(hw, inn).useful_macs, s.layers)
+                     [sum(p.useful_macs for p in msa_phase(hw, inn))]
+                     * s.layers,
+                     mlp_phase(hw, inn).useful_macs)
             add("fold", fold_phase(hw, s).useful_macs * s.layers)
         add_pair("msa", "mlp", "layer",
-                 sum(p.useful_macs for p in msa_phase(hw, s)),
-                 mlp_phase(hw, s).useful_macs, s.layers,
+                 [sum(p.useful_macs for p in msa_phase(hw, s, k))
+                  for k in s.head_counts],
+                 mlp_phase(hw, s).useful_macs,
                  groupable=stage_groupable(s))
         if s.patch_merging:
             add("merge", patch_merging_phase(hw, s).useful_macs)
@@ -703,7 +762,10 @@ def total_launch_cycles(m: VisionModelSpec,
         if s.inner_tokens:
             total += s.layers * layer_launch_cycles(hw, s, inner=True)
         g = group_size if stage_groupable(s) else 1
-        _, _, n_launches = _stage_group_plan(s.layers, g)
+        n_launches = 0
+        for seg in head_segments(s.head_counts):
+            _, _, nl = _stage_group_plan(seg, g)
+            n_launches += nl
         total += n_launches * layer_launch_cycles(hw, s)
     return total
 

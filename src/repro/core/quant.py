@@ -247,3 +247,128 @@ PTQ_ABS_TOL = 0.05
 def ptq_tolerance(float_logit_scale: float) -> float:
     """Calibration tolerance on int8 logit error, given max|float logits|."""
     return PTQ_REL_TOL * float(float_logit_scale) + PTQ_ABS_TOL
+
+
+# ---------------------------------------------------------------------------
+# Head pruning (ragged head grids — docs/ARCHITECTURE.md)
+# ---------------------------------------------------------------------------
+#
+# Pruning is applied to the PARAMS, not the executor: the per-head stacks
+# are sliced to the surviving heads and the concat projection's rows with
+# them, so the `(batch, head)` kernel grids — which size themselves off
+# ``wq.shape[0]`` — simply run fewer heads.  The concat accumulation is
+# rescaled by H/K (dense heads over surviving heads, per layer) to keep
+# the residual stream's magnitude; for int8 the rescale rides the
+# per-out-channel SCALE so the integer arithmetic of surviving heads is
+# untouched.
+
+
+def _keep_indices(mask_row) -> Tuple[int, ...]:
+    return tuple(i for i, v in enumerate(mask_row) if v)
+
+
+def slice_head_stack(leaf, keep):
+    """Slice a per-head ``(H, ...)`` stack to the surviving head rows.
+
+    Works on float arrays and `QTensor`s; a QTensor's per-head scale
+    ``(H, 1, Dh)`` follows its values row for row, so surviving heads
+    stay bit-identical to the dense quantization."""
+    idx = jnp.asarray(list(keep), dtype=jnp.int32)
+    if isinstance(leaf, QTensor):
+        return QTensor(jnp.take(leaf.values, idx, axis=0),
+                       jnp.take(leaf.scale, idx, axis=0))
+    return jnp.take(leaf, idx, axis=0)
+
+
+def slice_concat_rows(w_msa, keep, n_heads: int):
+    """Slice the ``(H*Dh, C)`` concat projection to the surviving heads'
+    row blocks and fold in the ``H/K`` concat rescale.
+
+    Float: rows sliced, values multiplied by H/K.  QTensor: int8 rows
+    sliced untouched and the per-out-channel scale multiplied by H/K —
+    dequantized output is exactly (H/K) x the dense surviving sum."""
+    keep = list(keep)
+    k = len(keep)
+    rescale = n_heads / float(k)
+    idx = jnp.asarray(keep, dtype=jnp.int32)
+    if isinstance(w_msa, QTensor):
+        hd, c = w_msa.values.shape
+        dh = hd // n_heads
+        vals = jnp.take(w_msa.values.reshape(n_heads, dh, c), idx, axis=0)
+        return QTensor(vals.reshape(k * dh, c), w_msa.scale * rescale)
+    hd, c = w_msa.shape
+    dh = hd // n_heads
+    rows = jnp.take(w_msa.reshape(n_heads, dh, c), idx, axis=0)
+    return rows.reshape(k * dh, c) * rescale
+
+
+def prune_block_heads(bp: Dict[str, Any], mask_row) -> Dict[str, Any]:
+    """Prune one transformer block's params to a per-layer head-mask row.
+
+    Slices the per-head ``wq/wk/wv`` stacks (QTensor scales follow their
+    values), the ``rel_bias`` head columns (Swin), and the ``w_msa``
+    concat rows with the H/K rescale folded in — so the shared kernels
+    never see dead heads and the executor needs no masking logic.  An
+    all-keep row returns the block unchanged."""
+    keep = _keep_indices(mask_row)
+    n_heads = len(tuple(mask_row))
+    if len(keep) == n_heads:
+        return bp
+    out = dict(bp)
+    for name in ("wq", "wk", "wv"):
+        out[name] = slice_head_stack(bp[name], keep)
+    if "rel_bias" in bp:
+        out["rel_bias"] = jnp.take(
+            bp["rel_bias"], jnp.asarray(keep, dtype=jnp.int32), axis=1)
+    out["w_msa"] = slice_concat_rows(bp["w_msa"], keep, n_heads)
+    return out
+
+
+def expand_block_heads(bp: Dict[str, Any], mask_row) -> Dict[str, Any]:
+    """Inverse of `prune_block_heads` — the zeroed-head dense oracle.
+
+    Re-inserts zero rows at the dead head positions so the DENSE
+    (H-head) schedule reproduces the pruned block: a zero ``wq/wk/wv``
+    head computes v = x @ 0 = 0 exactly, and zero concat rows contribute
+    exact zeros to the accumulation (int8 accumulates integers; float
+    adds exact 0.0 terms), so pruned and zero-padded dense executions
+    agree bit-for-bit."""
+    keep = _keep_indices(mask_row)
+    n_heads = len(tuple(mask_row))
+    if len(keep) == n_heads:
+        return bp
+
+    def pad_stack(leaf):
+        if isinstance(leaf, QTensor):
+            vals = jnp.zeros((n_heads,) + leaf.values.shape[1:],
+                             leaf.values.dtype)
+            scale = jnp.ones((n_heads,) + leaf.scale.shape[1:],
+                             leaf.scale.dtype)
+            vals = vals.at[jnp.asarray(keep)].set(leaf.values)
+            scale = scale.at[jnp.asarray(keep)].set(leaf.scale)
+            return QTensor(vals, scale)
+        out = jnp.zeros((n_heads,) + leaf.shape[1:], leaf.dtype)
+        return out.at[jnp.asarray(keep)].set(leaf)
+
+    out = dict(bp)
+    for name in ("wq", "wk", "wv"):
+        out[name] = pad_stack(bp[name])
+    if "rel_bias" in bp:
+        rb = bp["rel_bias"]
+        full = jnp.zeros(rb.shape[:-1] + (n_heads,), rb.dtype)
+        out["rel_bias"] = full.at[..., jnp.asarray(keep)].set(rb)
+    w = bp["w_msa"]
+    if isinstance(w, QTensor):
+        kd, c = w.values.shape
+        dh = kd // len(keep)
+        vals = jnp.zeros((n_heads, dh, c), w.values.dtype)
+        vals = vals.at[jnp.asarray(keep)].set(
+            w.values.reshape(len(keep), dh, c))
+        out["w_msa"] = QTensor(vals.reshape(n_heads * dh, c), w.scale)
+    else:
+        kd, c = w.shape
+        dh = kd // len(keep)
+        rows = jnp.zeros((n_heads, dh, c), w.dtype)
+        rows = rows.at[jnp.asarray(keep)].set(w.reshape(len(keep), dh, c))
+        out["w_msa"] = rows.reshape(n_heads * dh, c)
+    return out

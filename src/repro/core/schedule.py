@@ -109,7 +109,13 @@ class Phase:
     site: str
     grid: Tuple[int, int]          # (h, w) token grid at phase input
                                    # (inner phases: the pixel sub-grid)
-    heads: int = 0                 # descriptive (execution reads wq shape)
+    heads: int = 0                 # SURVIVING heads of this layer under the
+                                   # spec's head mask (== architectural count
+                                   # when dense).  Execution reads the wq
+                                   # shape — which pruning slices to match —
+                                   # but `_groupable` compares this field, so
+                                   # ragged depth splits layer groups at
+                                   # head-count boundaries.
     window: int = 0                # 0 -> global MSA
     shift: int = 0                 # shifted-window offset (W-MSA odd blocks)
     pos_embed: bool = False        # embed: add learned positional embedding
@@ -207,7 +213,8 @@ def compile_schedule(spec: VisionModelSpec, *, n_classes: int,
             shift = (window // 2 if window and b_i % 2 == 1
                      and st.n_windows > 1 else 0)
             phases.append(Phase(kind="msa", path=block, site=site,
-                                grid=(side, side), heads=st.heads,
+                                grid=(side, side),
+                                heads=st.layer_heads(b_i),
                                 window=window, shift=shift))
             phases.append(Phase(kind="mlp", path=block, site=site,
                                 grid=(side, side)))

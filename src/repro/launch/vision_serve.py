@@ -63,7 +63,8 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +91,66 @@ def round_buckets(buckets: Sequence[int], data_parallel: int) -> Tuple[int, ...]
     """
     dp = max(int(data_parallel), 1)
     return tuple(sorted({-(-b // dp) * dp for b in buckets}))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything that shapes HOW a model is served — one frozen value.
+
+    The serving surface grew one keyword at a time (mode, buckets, then
+    meshes, then fusion policies, then head masks); this dataclass is the
+    single place they all live, so every construction site — the CLI,
+    the bench, `tools/hue_report.py`, tests — names the same fields and
+    a server can be rebuilt from ``server.serve_cfg`` verbatim.
+
+    Construction paths:
+      * ``make_server(name, serve_cfg)`` — resolve the registry config
+        (honouring ``full``/``fused``/``fuse_group``/``backend``/
+        ``head_mask``), init params, quantize + calibrate for int8, and
+        return a ready `VisionServer`;
+      * ``VisionServer(cfg, params, serve_cfg=...)`` — bring your own
+        config/params (parity tests, shared-params multiplexing); the
+        config-build fields (``full``/``fused``/``fuse_group``/
+        ``backend``/``head_mask``/``seed``/``calib_images``) are
+        make_server's concern and ignored on this path.
+
+    ``head_mask`` overrides the registry config's per-layer head-pruning
+    mask (family-shaped: layers x heads rows, per-stage for Swin) — the
+    bench's ``--head-sweep`` serves the same model at several surviving-
+    head counts this way.
+    """
+
+    mode: str = "float"
+    buckets: Tuple[int, ...] = (1, 2, 4, 8)
+    mesh: Optional[Any] = dataclasses.field(default=None, compare=False)
+    data_parallel: Optional[int] = None
+    mesh_shape: Optional[Any] = None
+    fusion_policy: Optional[FusionPolicy] = dataclasses.field(
+        default=None, compare=False)
+    head_mask: Optional[Any] = None
+    # config-build fields (consumed by make_server)
+    full: bool = False
+    fused: Optional[bool] = None
+    fuse_group: Optional[int] = None
+    backend: Optional[str] = None
+    seed: int = 0
+    calib_images: int = 8
+
+    def __post_init__(self):
+        if self.mode not in ("float", "int8"):
+            raise ValueError(
+                f"mode must be 'float' or 'int8', got {self.mode!r}")
+        buckets = tuple(int(b) for b in self.buckets)
+        if not buckets or min(buckets) <= 0:
+            raise ValueError(
+                f"batch buckets must be positive, got {self.buckets!r}")
+        object.__setattr__(self, "buckets", buckets)
+
+
+# Sentinel distinguishing "kwarg not passed" from an explicit None on the
+# deprecated VisionServer keyword surface (None is a meaningful value for
+# most of them).
+_UNSET = object()
 
 
 class VisionRequest:
@@ -122,20 +183,24 @@ class VisionRequest:
 
     @property
     def latency_s(self) -> float:
-        assert self.t_done is not None, "request not served yet"
+        if self.t_done is None:
+            raise RuntimeError(f"request {self.rid} not served yet")
         return self.t_done - self.t_submit
 
     @property
     def queue_delay_s(self) -> float:
         """Submit → dispatch: time spent waiting in the queue."""
-        assert self.t_start is not None, "request not dispatched yet"
+        if self.t_start is None:
+            raise RuntimeError(f"request {self.rid} not dispatched yet")
         return self.t_start - self.t_submit
 
     @property
     def service_s(self) -> float:
         """Dispatch → done: time inside the batched forward."""
-        assert self.t_done is not None, "request not served yet"
-        assert self.t_start is not None, "request not dispatched yet"
+        if self.t_start is None:
+            raise RuntimeError(f"request {self.rid} not dispatched yet")
+        if self.t_done is None:
+            raise RuntimeError(f"request {self.rid} not served yet")
         return self.t_done - self.t_start
 
     def remaining_budget_ms(self, now: Optional[float] = None) -> float:
@@ -196,26 +261,50 @@ class VisionServer:
     """
 
     def __init__(self, cfg, params, *,
+                 serve_cfg: Optional[ServeConfig] = None,
                  qparams=None, calibrator: Optional[Calibrator] = None,
-                 mode: str = "float",
-                 buckets: Sequence[int] = (1, 2, 4, 8),
-                 mesh=None, data_parallel: Optional[int] = None,
-                 mesh_shape=None,
-                 fusion_policy: Optional[FusionPolicy] = None,
-                 model_name: Optional[str] = None):
-        assert mode in ("float", "int8")
+                 model_name: Optional[str] = None,
+                 mode=_UNSET, buckets=_UNSET, mesh=_UNSET,
+                 data_parallel=_UNSET, mesh_shape=_UNSET,
+                 fusion_policy=_UNSET):
+        # Deprecated keyword surface (one release): fold stray kwargs into
+        # a ServeConfig with a warning; mixing both paths is an error.
+        legacy = {k: v for k, v in (("mode", mode), ("buckets", buckets),
+                                    ("mesh", mesh),
+                                    ("data_parallel", data_parallel),
+                                    ("mesh_shape", mesh_shape),
+                                    ("fusion_policy", fusion_policy))
+                  if v is not _UNSET}
+        if legacy:
+            if serve_cfg is not None:
+                raise ValueError(
+                    "pass serve_cfg=ServeConfig(...) OR the deprecated "
+                    f"per-field kwargs, not both (got {sorted(legacy)})")
+            warnings.warn(
+                "VisionServer(mode=/buckets=/mesh=/data_parallel=/"
+                "mesh_shape=/fusion_policy=) is deprecated; pass "
+                "serve_cfg=ServeConfig(...) instead",
+                DeprecationWarning, stacklevel=2)
+            serve_cfg = ServeConfig(**legacy)
+        sc = serve_cfg if serve_cfg is not None else ServeConfig()
+        self.serve_cfg = sc
+        mode, buckets = sc.mode, sc.buckets     # validated by ServeConfig
         if mode == "int8":
-            assert qparams is not None, "int8 mode needs quantized params"
-            assert calibrator is not None and calibrator.frozen is not None, \
-                "int8 mode needs a frozen activation-scale calibrator"
-        if mesh is None and mesh_shape is not None:
+            if qparams is None:
+                raise ValueError("int8 mode needs quantized params")
+            if calibrator is None or calibrator.frozen is None:
+                raise ValueError("int8 mode needs a frozen "
+                                 "activation-scale calibrator")
+        mesh = sc.mesh
+        if mesh is None and sc.mesh_shape is not None:
             from repro.launch.mesh import make_vision_mesh, parse_mesh_shape
-            d, m = parse_mesh_shape(mesh_shape)
+            d, m = parse_mesh_shape(sc.mesh_shape)
             if d * m > 1:
                 mesh = make_vision_mesh(data=d, model=m)
-        if mesh is None and data_parallel is not None and data_parallel > 1:
+        if mesh is None and sc.data_parallel is not None \
+                and sc.data_parallel > 1:
             from repro.launch.mesh import make_vision_mesh
-            mesh = make_vision_mesh(data_parallel)
+            mesh = make_vision_mesh(sc.data_parallel)
         self.mesh = mesh
         # Batch (data) axis size vs model axis size: bucket rounding and
         # batch placement follow ``dp`` alone; ``mp`` decides the
@@ -238,7 +327,7 @@ class VisionServer:
         self.calibrator = calibrator
         self.mode = mode
         self.model_name = model_name or getattr(cfg, "name", "model")
-        self.fusion_policy = fusion_policy
+        self.fusion_policy = sc.fusion_policy
         # Round to the DATA-axis size only (a (2, 4) mesh rounds to 2 —
         # the model axis never carries batch rows).
         self.buckets = round_buckets(buckets, self.dp)
@@ -247,22 +336,23 @@ class VisionServer:
             # ``data`` while the model axis still splits the head grid —
             # strictly better than padding the request up to dp images.
             self.buckets = (1,) + self.buckets
-        assert self.buckets and self.buckets[0] > 0, \
-            f"batch buckets must be positive, got {buckets}"
+        if not self.buckets or self.buckets[0] <= 0:
+            raise ValueError(
+                f"batch buckets must be positive, got {buckets}")
         # Fused or per-phase schedule, decided per bucket: without a
         # policy every bucket follows ``cfg.fused`` (the pre-policy
         # behaviour); a `FusionPolicy` overrides it from measured
         # (model, mode, batch) A/B data — so a config the bench measured
         # as a fused LOSS serves unfused instead of shipping it silently.
-        if fusion_policy is None:
+        if sc.fusion_policy is None:
             self._bucket_fused = {b: bool(getattr(cfg, "fused", True))
                                   for b in self.buckets}
             self._bucket_group = {b: int(getattr(cfg, "fuse_group", 1))
                                   for b in self.buckets}
         else:
-            self._bucket_fused = fusion_policy.decisions(
+            self._bucket_fused = sc.fusion_policy.decisions(
                 self.model_name, mode, self.buckets)
-            self._bucket_group = fusion_policy.group_decisions(
+            self._bucket_group = sc.fusion_policy.group_decisions(
                 self.model_name, mode, self.buckets)
         self.queue: List[VisionRequest] = []
         self.done: List[VisionRequest] = []
@@ -369,8 +459,9 @@ class VisionServer:
             return None
         bucket = self._bucket_for(len(requests)) if bucket is None \
             else int(bucket)
-        assert len(requests) <= bucket, \
-            f"{len(requests)} requests cannot ride a {bucket}-bucket"
+        if len(requests) > bucket:
+            raise ValueError(
+                f"{len(requests)} requests cannot ride a {bucket}-bucket")
         images = np.stack([r.image for r in requests])
         if bucket > len(requests):             # pad up to the bucket size
             pad = np.zeros((bucket - len(requests),) + images.shape[1:],
@@ -556,6 +647,45 @@ def calibrate(qparams, cfg, images: np.ndarray,
     return cal
 
 
+def make_server(cfg_name: str, serve_cfg: Optional[ServeConfig] = None, *,
+                params=None, qparams=None,
+                calibrator: Optional[Calibrator] = None,
+                calib_bank: Optional[np.ndarray] = None) -> VisionServer:
+    """Build a ready `VisionServer` for a registered model name.
+
+    The one construction path the CLI, the bench and `tools/hue_report.py`
+    share: resolves the registry config through ``serve_cfg``'s build
+    fields (``full``/``fused``/``fuse_group``/``backend``/``head_mask``),
+    inits params at ``serve_cfg.seed`` when not supplied, and — for int8 —
+    quantizes and calibrates (on ``calib_bank`` or ``calib_images``
+    synthetic images) unless a frozen calibrator is passed in.
+
+    ``params``/``qparams``/``calibrator`` short-circuit the matching step,
+    so callers serving one model under several `ServeConfig`s (the bench's
+    mode × placement sweeps) pay init + calibration once.
+    """
+    sc = serve_cfg if serve_cfg is not None else ServeConfig()
+    cfg = vision_registry.build_cfg(
+        cfg_name, full=sc.full, backend=sc.backend, fused=sc.fused,
+        fuse_group=sc.fuse_group, head_mask=sc.head_mask)
+    if params is None:
+        params = vision_registry.init_params(
+            jax.random.PRNGKey(sc.seed), cfg)
+    if sc.mode == "int8":
+        if qparams is None:
+            qparams = vision_registry.quantize(params)
+        if calibrator is None:
+            bank = calib_bank
+            if bank is None:
+                rng = np.random.default_rng(sc.seed)
+                bank = rng.standard_normal(
+                    (sc.calib_images, cfg.image, cfg.image, 3)
+                ).astype(np.float32)
+            calibrator = calibrate(qparams, cfg, bank)
+    return VisionServer(cfg, params, serve_cfg=sc, qparams=qparams,
+                        calibrator=calibrator, model_name=cfg_name)
+
+
 def build_edge_vit(image: int = 32, patch: int = 8, dim: int = 96,
                    heads: int = 4, layers: int = 4, n_classes: int = 10,
                    backend: Optional[str] = None) -> vit.ViTConfig:
@@ -596,12 +726,11 @@ def serve_model(cfg, *, requests: int, buckets: Sequence[int],
 
     all_stats = []
     for mode in modes:
-        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                              mode=mode, buckets=buckets,
-                              data_parallel=devices,
-                              mesh_shape=mesh_shape,
-                              fusion_policy=fusion_policy,
-                              model_name=name)
+        sc = ServeConfig(mode=mode, buckets=tuple(buckets),
+                         data_parallel=devices, mesh_shape=mesh_shape,
+                         fusion_policy=fusion_policy)
+        server = VisionServer(cfg, params, serve_cfg=sc, qparams=qparams,
+                              calibrator=cal, model_name=name)
         server.submit_many(images)
         stats = server.run()
         stats["model"] = name or cfg.name
@@ -660,23 +789,26 @@ def serve_stream(model_names: Sequence[str], *, modes: Sequence[str],
             if mode == "int8":
                 qparams = vision_registry.quantize(params)
                 cal = calibrate(qparams, cfg, banks[nm])
+            sc = ServeConfig(mode=mode, buckets=tuple(buckets),
+                             data_parallel=devices, mesh_shape=mesh_shape,
+                             fusion_policy=fusion_policy)
             servers[nm] = VisionServer(
-                cfg, params, qparams=qparams, calibrator=cal, mode=mode,
-                buckets=buckets, data_parallel=devices,
-                mesh_shape=mesh_shape, fusion_policy=fusion_policy,
-                model_name=nm)
+                cfg, params, serve_cfg=sc, qparams=qparams,
+                calibrator=cal, model_name=nm)
             if latency_mesh is not None:
+                lat_sc = dataclasses.replace(
+                    sc, buckets=(1,), data_parallel=None,
+                    mesh_shape=latency_mesh)
                 lat_servers[nm] = VisionServer(
-                    cfg, params, qparams=qparams, calibrator=cal,
-                    mode=mode, buckets=(1,), mesh_shape=latency_mesh,
-                    fusion_policy=fusion_policy, model_name=nm)
+                    cfg, params, serve_cfg=lat_sc, qparams=qparams,
+                    calibrator=cal, model_name=nm)
             if bench_data is not None:
                 table = adm.latency_table_from_bench(bench_data, nm, mode)
                 if table:
                     tables[nm] = table
         if serving == "drain":
-            assert len(servers) == 1, \
-                "the drain baseline serves a single model"
+            if len(servers) != 1:
+                raise ValueError("the drain baseline serves a single model")
             (nm, server), = servers.items()
             adm.measure_bucket_latencies(server)       # compile warm-up
             stats = adm.run_drain_stream(server, trace, banks)

@@ -36,7 +36,8 @@ import jax.numpy as jnp
 
 from repro.core import schedule as sched_lib
 from repro.core.perfmodel import StageSpec, VisionModelSpec
-from repro.core.quant import quantize_vision_params
+from repro.core.quant import prune_block_heads, quantize_vision_params
+from repro.models.config import normalize_head_mask
 from .layers import Params, dense_init, layer_norm
 
 
@@ -56,6 +57,24 @@ class SwinConfig:
     fused: bool = True             # fuse msa+mlp pairs into layer phases
     fuse_group: int = 1            # >1: group runs of fused layers into
                                    # layer_group megakernel phases
+    # Per-stage head-pruning masks: ``head_mask[stage][layer][head]``
+    # (nested 0/1 tuples matching depths/heads; None = dense).  Each
+    # stage normalizes independently — stages have different head counts.
+    head_mask: Optional[Tuple[Tuple[Tuple[int, ...], ...], ...]] = None
+
+    def __post_init__(self):
+        if self.head_mask is None:
+            return
+        if len(self.head_mask) != len(self.depths):
+            raise ValueError(
+                f"head mask has {len(self.head_mask)} stages, config "
+                f"has {len(self.depths)}")
+        object.__setattr__(self, "head_mask", tuple(
+            normalize_head_mask(m, layers=d, heads=h)
+            for m, d, h in zip(self.head_mask, self.depths, self.heads)))
+
+    def stage_mask(self, s_i: int):
+        return self.head_mask[s_i] if self.head_mask else None
 
     @property
     def patch_dim(self) -> int:
@@ -126,6 +145,12 @@ def init_params(key, cfg: SwinConfig) -> Params:
                 "w_down": dense_init(next(ks), hid, dim, dtype),
                 "b_down": jnp.zeros((dim,), dtype),
             })
+        mask = cfg.stage_mask(s_i)
+        if mask:
+            # dense init first (same RNG stream as the unmasked config),
+            # then slice — surviving heads match the dense model exactly
+            blocks = [prune_block_heads(bp, row)
+                      for bp, row in zip(blocks, mask)]
         stage = {"blocks": blocks}
         if s_i < len(cfg.depths) - 1:
             stage["merge_ln_w"] = jnp.ones((4 * dim,), dtype)
@@ -155,7 +180,8 @@ def to_spec(cfg: SwinConfig) -> VisionModelSpec:
             layers=depth, dim=cfg.stage_dim(s_i), heads=n_heads,
             mlp_ratio=cfg.mlp_ratio, tokens=cfg.window * cfg.window,
             n_windows=(side // cfg.window) ** 2,
-            patch_merging=(s_i < len(cfg.depths) - 1)))
+            patch_merging=(s_i < len(cfg.depths) - 1),
+            head_mask=cfg.stage_mask(s_i)))
     return VisionModelSpec(name=cfg.name,
                            image=(cfg.image, cfg.image, 3),
                            patch=cfg.patch, stages=tuple(stages),
@@ -195,8 +221,8 @@ def _wmsa_ref(bp: Params, x: jax.Array, win: int, shift: int,
               rel_idx: jax.Array) -> jax.Array:
     """Windowed MSA on (B, H, W, C) tokens — direct einsum, no kernels."""
     b, h, w, c = x.shape
-    n_heads = bp["wq"].shape[0]
-    dh = c // n_heads
+    n_heads = bp["wq"].shape[0]       # surviving heads (pruned blocks too)
+    dh = bp["wq"].shape[2]
     if shift:
         x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
     xw = sched_lib.window_partition(x, win)             # (B*nW, n, C)
@@ -212,7 +238,7 @@ def _wmsa_ref(bp: Params, x: jax.Array, win: int, shift: int,
     s = s + jnp.tile(mask, (s.shape[0] // n_w, 1, 1))[:, None]
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("whnm,whmd->whnd", p, v)
-    o = o.transpose(0, 2, 1, 3).reshape(-1, n, c) @ bp["w_msa"]
+    o = o.transpose(0, 2, 1, 3).reshape(-1, n, n_heads * dh) @ bp["w_msa"]
     o = sched_lib.window_reverse(o, win, h, w)
     if shift:
         o = jnp.roll(o, (shift, shift), axis=(1, 2))

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 
 from repro.core import schedule as sched_lib
 from repro.core.perfmodel import StageSpec, VisionModelSpec
-from repro.core.quant import quantize_vision_params
+from repro.core.quant import prune_block_heads, quantize_vision_params
+from repro.models.config import normalize_head_mask
 from .layers import Params, dense_init, layer_norm
 
 
@@ -66,6 +67,16 @@ class TNTConfig:
     fuse_group: int = 1            # >1: group runs of fused layers (a
                                    # no-op for TNT — fold re-entry
                                    # interleaves, layers never adjacent)
+    # Per-layer OUTER head-pruning mask (layers x heads nested 0/1
+    # tuples; None = dense).  Inner (pixel-level) heads stay dense — the
+    # inner stream's c=16..24 channels leave nothing worth pruning.
+    head_mask: Optional[tuple] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "head_mask",
+            normalize_head_mask(self.head_mask, layers=self.layers,
+                                heads=self.heads))
 
     @property
     def tokens(self) -> int:
@@ -170,8 +181,8 @@ def init_params(key, cfg: TNTConfig) -> Params:
             next(ks), (cfg.tokens, cfg.dim)) * 0.02).astype(dtype),
     }
     layers = []
-    for _ in range(cfg.layers):
-        layers.append({
+    for li in range(cfg.layers):
+        lp = {
             "inner": _block(ks, cfg.inner_dim, cfg.inner_heads,
                             cfg.inner_mlp_hidden, dtype),
             "fold_ln_w": jnp.ones((cfg.fold_dim,), dtype),
@@ -179,7 +190,12 @@ def init_params(key, cfg: TNTConfig) -> Params:
             "fold_w": dense_init(next(ks), cfg.fold_dim, cfg.dim, dtype),
             "fold_b": jnp.zeros((cfg.dim,), dtype),
             "outer": _block(ks, cfg.dim, cfg.heads, cfg.mlp_hidden, dtype),
-        })
+        }
+        if cfg.head_mask:
+            # dense init first (same RNG stream as the unmasked config),
+            # then slice the outer block to its surviving heads
+            lp["outer"] = prune_block_heads(lp["outer"], cfg.head_mask[li])
+        layers.append(lp)
     params["layers"] = layers
     params["ln_f_w"] = jnp.ones((cfg.dim,), dtype)
     params["ln_f_b"] = jnp.zeros((cfg.dim,), dtype)
@@ -201,7 +217,8 @@ def to_spec(cfg: TNTConfig) -> VisionModelSpec:
                       inner_tokens=cfg.inner_tokens,
                       inner_dim=cfg.inner_dim,
                       inner_heads=cfg.inner_heads,
-                      inner_mlp_ratio=cfg.inner_mlp_ratio)
+                      inner_mlp_ratio=cfg.inner_mlp_ratio,
+                      head_mask=cfg.head_mask)
     return VisionModelSpec(name=cfg.name,
                            image=(cfg.image, cfg.image, 3),
                            patch=cfg.patch, stages=(stage,),
@@ -241,7 +258,7 @@ def quantize_tnt(params: Params) -> Params:
 def _msa_ref(bp: Params, x: jax.Array) -> jax.Array:
     """Global per-head MSA on (B', N, C) — direct einsum, no kernels."""
     n_heads = bp["wq"].shape[0]
-    dh = x.shape[-1] // n_heads
+    dh = bp["wq"].shape[2]
     q = jnp.einsum("bnc,hcd->bhnd", x, bp["wq"])
     k = jnp.einsum("bnc,hcd->bhnd", x, bp["wk"])
     v = jnp.einsum("bnc,hcd->bhnd", x, bp["wv"])

@@ -78,6 +78,82 @@ _register(VisionModel(
 ))
 
 
+# ---------------------------------------------------------------------------
+# Head-pruned variants (ragged per-layer masks — docs/ARCHITECTURE.md)
+# ---------------------------------------------------------------------------
+
+# Reduced-geometry masks: deliberately ragged (uneven surviving-head counts
+# across layers) so the pruned variants exercise the schedule's group
+# splitting, not just smaller uniform grids.
+_PRUNED_MASKS: Dict[str, Any] = {
+    # counts per layer: 3, 3, 2, 4 (of 4)
+    "vit_edge": ((1, 1, 1, 0), (0, 1, 1, 1), (1, 0, 0, 1), (1, 1, 1, 1)),
+    # counts per layer: 2, 2, 1, 3 (of 3)
+    "deit_t": ((1, 1, 0), (0, 1, 1), (0, 1, 0), (1, 1, 1)),
+    # stage 0 counts 2, 3 (of 3); stage 1 counts 4, 3 (of 6)
+    "swin_t": (((1, 0, 1), (1, 1, 1)),
+               ((1, 1, 0, 1, 1, 0), (0, 1, 1, 0, 1, 0))),
+    # outer-stream counts per layer: 3, 2 (of 4); inner stream stays dense
+    "tnt_s": ((1, 1, 1, 0), (0, 1, 0, 1)),
+}
+
+
+def uniform_head_mask(cfg: Any, k: int) -> Any:
+    """A mask keeping the first ``min(k, heads)`` heads of every layer
+    (per stage for Swin; TNT masks the outer stream only).  The bench's
+    ``--head-sweep`` uses this to chart throughput vs. surviving heads."""
+    def row(h: int) -> Tuple[int, ...]:
+        keep = max(1, min(int(k), h))
+        return (1,) * keep + (0,) * (h - keep)
+    if isinstance(cfg, swin.SwinConfig):
+        return tuple(tuple(row(h) for _ in range(d))
+                     for d, h in zip(cfg.depths, cfg.heads))
+    return tuple(row(cfg.heads) for _ in range(cfg.layers))
+
+
+def ragged_head_mask(cfg: Any) -> Any:
+    """Deterministic ragged mask for any registered config: layer ``li``
+    drops ``li % min(heads, 3)`` heads at rotating positions (at least one
+    head always survives).  Used for the full-geometry pruned variants,
+    where hand-written masks would not scale."""
+    def row(h: int, li: int) -> Tuple[int, ...]:
+        drop = li % min(h, 3)
+        dead = {(li + j) % h for j in range(drop)}
+        return tuple(0 if i in dead else 1 for i in range(h))
+    if isinstance(cfg, swin.SwinConfig):
+        li, stages = 0, []
+        for d, h in zip(cfg.depths, cfg.heads):
+            stages.append(tuple(row(h, li + j) for j in range(d)))
+            li += d
+        return tuple(stages)
+    return tuple(row(cfg.heads, li) for li in range(cfg.layers))
+
+
+def _pruned_entry(base: str) -> VisionModel:
+    entry = _REGISTRY[base]
+
+    def reduced(_e=entry, _b=base):
+        cfg = _e.reduced()
+        return dataclasses.replace(cfg, name=cfg.name + "p",
+                                   head_mask=_PRUNED_MASKS[_b])
+
+    def full(_e=entry):
+        cfg = _e.full()
+        return dataclasses.replace(cfg, name=cfg.name + "p",
+                                   head_mask=ragged_head_mask(cfg))
+
+    return VisionModel(
+        name=base + "_p", family=entry.family,
+        description=f"head-pruned {base}: ragged per-layer mask; surviving "
+                    "heads bit-match the dense model's (sliced at init)",
+        reduced=reduced, full=full)
+
+
+for _base in ("vit_edge", "deit_t", "swin_t", "tnt_s"):
+    _register(_pruned_entry(_base))
+del _base
+
+
 def list_models() -> Tuple[str, ...]:
     """Registered model names, sorted — deterministic CLI/bench order."""
     return tuple(sorted(_REGISTRY))
@@ -93,7 +169,8 @@ def get(name: str) -> VisionModel:
 def build_cfg(name: str, *, full: bool = False,
               backend: Optional[str] = None,
               fused: Optional[bool] = None,
-              fuse_group: Optional[int] = None) -> Any:
+              fuse_group: Optional[int] = None,
+              head_mask: Optional[Any] = None) -> Any:
     entry = get(name)
     cfg = (entry.full if full else entry.reduced)()
     if backend is not None:
@@ -102,6 +179,10 @@ def build_cfg(name: str, *, full: bool = False,
         cfg = dataclasses.replace(cfg, fused=fused)
     if fuse_group is not None:
         cfg = dataclasses.replace(cfg, fuse_group=int(fuse_group))
+    if head_mask is not None:
+        # family-shaped mask (per-stage for Swin); validated by the
+        # config's __post_init__ via models.config.normalize_head_mask
+        cfg = dataclasses.replace(cfg, head_mask=head_mask)
     return cfg
 
 

@@ -22,14 +22,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import schedule as sched_lib
 from repro.core.perfmodel import StageSpec, VisionModelSpec
-from repro.core.quant import quantize_vision_params
+from repro.core.quant import prune_block_heads, quantize_vision_params
+from repro.models.config import normalize_head_mask
 from .layers import Params, dense_init
 
 
@@ -48,6 +49,17 @@ class ViTConfig:
     fused: bool = True             # fuse msa+mlp pairs into layer phases
     fuse_group: int = 1            # >1: group runs of fused layers into
                                    # layer_group megakernel phases
+    # Per-layer head-pruning mask (nested 0/1 tuples, layers x heads;
+    # None = dense).  ``heads``/``head_dim`` stay architectural — the
+    # mask slices the per-head stacks at init and the schedule's grids
+    # follow (ragged depth is legal; see docs/ARCHITECTURE.md).
+    head_mask: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "head_mask",
+            normalize_head_mask(self.head_mask, layers=self.layers,
+                                heads=self.heads))
 
     @property
     def tokens(self) -> int:
@@ -120,6 +132,11 @@ def init_params(key, cfg: ViTConfig) -> Params:
             "b_down": jnp.zeros((cfg.dim,), dtype),
         }
         layers.append(lp)
+    if cfg.head_mask:
+        # dense init first (identical RNG stream to the unmasked config),
+        # then slice — surviving heads match the dense model bit for bit
+        layers = [prune_block_heads(lp, row)
+                  for lp, row in zip(layers, cfg.head_mask)]
     params["layers"] = layers
     params["ln_f_w"] = jnp.ones((cfg.dim,), dtype)
     params["ln_f_b"] = jnp.zeros((cfg.dim,), dtype)
@@ -136,7 +153,8 @@ def to_spec(cfg: ViTConfig) -> VisionModelSpec:
     """Describe the config as the perfmodel's stage form — the same spec
     the analytic ViTA model and the schedule compiler consume."""
     stage = StageSpec(layers=cfg.layers, dim=cfg.dim, heads=cfg.heads,
-                      mlp_ratio=cfg.mlp_ratio, tokens=cfg.tokens)
+                      mlp_ratio=cfg.mlp_ratio, tokens=cfg.tokens,
+                      head_mask=cfg.head_mask)
     return VisionModelSpec(name=cfg.name,
                            image=(cfg.image, cfg.image, 3),
                            patch=cfg.patch, stages=(stage,),

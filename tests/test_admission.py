@@ -18,8 +18,8 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.launch import admission as adm
-from repro.launch.vision_serve import (InFlight, VisionServer,
-                                       build_edge_vit)
+from repro.launch.vision_serve import (InFlight, ServeConfig,
+                                       VisionServer, build_edge_vit)
 from repro.models import vit
 
 
@@ -101,7 +101,7 @@ def test_dispatch_complete_split_and_time_accounting(tiny_setup):
     not); `complete` reaps; the submit->done span decomposes exactly
     into queue delay + service time — no restamping needed."""
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(4,))
+    server = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(4,)))
     for im in images[:3]:
         server.submit(im)
     inflight = server.dispatch()
@@ -124,7 +124,8 @@ def test_open_stream_serves_all_with_parity(tiny_setup):
     the SAME logits the solo server produces, infeasible_served stays 0,
     and the stats row carries the full open-stream schema."""
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2, 4)))
     ctl = adm.AdmissionController({"edge": server},
                                   latencies={"edge": {1: 1.0, 2: 1.2,
                                                       4: 1.5}})
@@ -137,7 +138,7 @@ def test_open_stream_serves_all_with_parity(tiny_setup):
     for key in ("latency_p50_ms", "latency_p95_ms", "latency_p99_ms",
                 "queue_delay_p50_ms", "service_p50_ms", "sla_miss_rate"):
         assert key in stats
-    solo = VisionServer(cfg, params, mode="float", buckets=(1,))
+    solo = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(1,)))
     solo.submit(images[0])
     solo.run()
     ref = solo.done[0].logits
@@ -153,8 +154,8 @@ def test_multiplex_picks_deepest_queue(tiny_setup):
     """Two model lanes on one mesh: the first dispatch goes to the lane
     with the deeper queue (depth-weighted multiplexing)."""
     cfg, params, images = tiny_setup
-    servers = {"a": VisionServer(cfg, params, mode="float", buckets=(4,)),
-               "b": VisionServer(cfg, params, mode="float", buckets=(4,))}
+    servers = {"a": VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(4,))),
+               "b": VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(4,)))}
     tables = {"a": {4: 1.0}, "b": {4: 1.0}}
     ctl = adm.AdmissionController(servers, latencies=tables,
                                   max_inflight=1)
@@ -174,7 +175,7 @@ def test_partial_bucket_held_while_ring_busy(tiny_setup):
     batch executes (free on a serial device; late arrivals may still
     fill it), then dispatched once the ring empties."""
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(4,))
+    server = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(4,)))
     ctl = adm.AdmissionController({"edge": server},
                                   latencies={"edge": {4: 1.0}},
                                   max_inflight=2)
@@ -192,8 +193,9 @@ def test_latency_path_routes_deadline_pressed_single(tiny_setup):
     dedicated batch=1 latency server (PR 8's 2-D mesh path in prod; any
     batch=1 server here) and still completes with a valid prediction."""
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
-    lat_server = VisionServer(cfg, params, mode="float", buckets=(1,))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2, 4)))
+    lat_server = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(1,)))
     ctl = adm.AdmissionController(
         {"edge": server},
         latencies={"edge": {1: 500.0, 2: 600.0, 4: 700.0}},
@@ -209,7 +211,8 @@ def test_latency_path_routes_deadline_pressed_single(tiny_setup):
 
 def test_measure_bucket_latencies_leaves_server_clean(tiny_setup):
     cfg, params, _ = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2)))
     table = adm.measure_bucket_latencies(server)
     assert set(table) == {1, 2}
     assert all(ms > 0 for ms in table.values())
@@ -275,7 +278,8 @@ def test_stream_summary_empty_schema():
 
 def test_run_drain_stream_baseline(tiny_setup):
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2, 4)))
     trace = adm.poisson_trace(2000.0, 8, "edge", sla_ms=500.0, seed=1,
                               n_images=len(images))
     stats = adm.run_drain_stream(server, trace, {"edge": images})

@@ -17,8 +17,8 @@ from repro.core import hue as hue_lib
 from repro.core import perfmodel as pm
 from repro.core import schedule as sched_lib
 from repro.core.schedule import FusionPolicy
-from repro.launch.vision_serve import (VisionServer, build_edge_vit,
-                                       calibrate)
+from repro.launch.vision_serve import (ServeConfig, VisionServer,
+                                       build_edge_vit, calibrate)
 from repro.models import vision_registry, vit
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -282,14 +282,16 @@ def test_server_group_decisions_per_bucket(tiny_setup):
     grouped forward serves logits identical to the per-layer one."""
     cfg, params, images = tiny_setup
     policy = FusionPolicy.from_bench(GROUPED_BENCH_FIXTURE)
-    server = VisionServer(cfg, params, mode="float", buckets=(1,),
-                          fusion_policy=policy, model_name="m")
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(1,), fusion_policy=policy),
+        model_name="m")
     assert server._bucket_fused == {1: True}
     assert server._bucket_group == {1: 4}
     server.submit_many(images)
     stats = server.run()
     assert stats["group_buckets"] == {"1": 4}
-    plain = VisionServer(cfg, params, mode="float", buckets=(1,))
+    plain = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(1,)))
     assert plain._bucket_group == {1: 1}
     plain.submit_many(images)
     plain.run()
@@ -310,10 +312,13 @@ def test_server_policy_never_matches_unfused_config(tiny_setup):
     identical to a server built on the unfused config."""
     import dataclasses
     cfg, params, images = tiny_setup
-    policied = VisionServer(cfg, params, mode="float", buckets=(4,),
-                            fusion_policy=FusionPolicy(mode="never"))
+    policied = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(4,),
+                              fusion_policy=FusionPolicy(mode="never")))
     unfused_cfg = dataclasses.replace(cfg, fused=False)
-    plain = VisionServer(unfused_cfg, params, mode="float", buckets=(4,))
+    plain = VisionServer(unfused_cfg, params,
+                         serve_cfg=ServeConfig(buckets=(4,)))
     policied.submit_many(images)
     plain.submit_many(images)
     s1, s2 = policied.run(), plain.run()
@@ -328,8 +333,10 @@ def test_server_auto_policy_decides_per_bucket(tiny_setup):
     cfg, params, images = tiny_setup
     name = "m"
     policy = FusionPolicy.from_bench(BENCH_FIXTURE)
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 4),
-                          fusion_policy=policy, model_name=name)
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(1, 4), fusion_policy=policy),
+        model_name=name)
     assert server._bucket_fused == {1: True, 4: False}
     server.submit_many(images)
     stats = server.run()
@@ -338,7 +345,7 @@ def test_server_auto_policy_decides_per_bucket(tiny_setup):
 
 def test_profile_stats_schema(tiny_setup):
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(2,),
+    server = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(2,)),
                           model_name="tiny")
     report = server.profile_stats(repeats=1)
     assert report["model"] == "tiny" and report["mode"] == "float"
@@ -357,7 +364,8 @@ def test_profile_stats_grouped_schema(tiny_setup):
     import dataclasses
     cfg, params, images = tiny_setup
     server = VisionServer(dataclasses.replace(cfg, fuse_group=2), params,
-                          mode="float", buckets=(2,), model_name="tiny")
+                          serve_cfg=ServeConfig(buckets=(2,)),
+                          model_name="tiny")
     report = server.profile_stats(repeats=1)
     assert report["fused"] is True and report["group_size"] == 2
     kinds = [r["phase"] for r in report["rows"]]
@@ -370,7 +378,8 @@ def test_profile_stats_int8_runs_frozen_path(tiny_setup):
     qparams = vit.quantize_vit(params)
     cal = calibrate(qparams, cfg, images, n_batches=2)
     server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                          mode="int8", buckets=(2,))
+                          serve_cfg=ServeConfig(mode="int8",
+                                                buckets=(2,)))
     report = server.profile_stats(repeats=1)
     assert report["mode"] == "int8"
     assert report["total"]["measured_ms"] > 0

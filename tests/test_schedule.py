@@ -412,8 +412,10 @@ def test_tnt_calibration_sites_cover_every_phase(tnt_setup):
 
 
 def test_registry_lists_the_paper_families():
-    assert set(vision_registry.list_models()) == {"vit_edge", "deit_t",
-                                                  "swin_t", "tnt_s"}
+    # the four paper families plus their head-pruned serving variants
+    assert set(vision_registry.list_models()) == {
+        "vit_edge", "deit_t", "swin_t", "tnt_s",
+        "vit_edge_p", "deit_t_p", "swin_t_p", "tnt_s_p"}
     # sorted -> deterministic CLI/bench ordering across runs
     assert list(vision_registry.list_models()) == \
         sorted(vision_registry.list_models())

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core.quant import ptq_tolerance
-from repro.launch.vision_serve import (VisionServer, build_edge_vit,
-                                       calibrate)
+from repro.launch.vision_serve import (ServeConfig, VisionServer,
+                                       build_edge_vit, calibrate)
 from repro.models import vision_registry, vit
 
 
@@ -25,7 +25,8 @@ def tiny_setup():
 
 def test_all_requests_drain_with_latency(tiny_setup):
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2, 4)))
     reqs = server.submit_many(images)
     stats = server.run()
     assert stats["requests"] == len(images)
@@ -42,13 +43,13 @@ def test_all_requests_drain_with_latency(tiny_setup):
 
 def test_bucket_padding(tiny_setup):
     cfg, params, images = tiny_setup
-    server = VisionServer(cfg, params, mode="float", buckets=(4,))
+    server = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(4,)))
     server.submit_many(images[:3])
     stats = server.run()
     assert stats["requests"] == 3
     assert stats["padded"] == 1          # 3 requests padded up to bucket 4
     # padding must not perturb the real requests' logits
-    solo = VisionServer(cfg, params, mode="float", buckets=(1,))
+    solo = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(1,)))
     solo.submit(images[0])
     solo.run()
     np.testing.assert_allclose(server.done[0].logits, solo.done[0].logits,
@@ -62,8 +63,9 @@ def test_int8_and_float_agree_within_ptq_tolerance(tiny_setup):
 
     results = {}
     for mode in ("float", "int8"):
-        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                              mode=mode, buckets=(1, 2, 4))
+        server = VisionServer(
+            cfg, params, qparams=qparams, calibrator=cal,
+            serve_cfg=ServeConfig(mode=mode, buckets=(1, 2, 4)))
         server.submit_many(images)
         stats = server.run()
         assert stats["requests"] == len(images)
@@ -74,10 +76,63 @@ def test_int8_and_float_agree_within_ptq_tolerance(tiny_setup):
 
 
 def test_int8_mode_requires_calibration(tiny_setup):
+    # ValueError (not assert): the precondition must hold under python -O
     cfg, params, _ = tiny_setup
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="calibrator"):
         VisionServer(cfg, params, qparams=vit.quantize_vit(params),
-                     calibrator=None, mode="int8")
+                     calibrator=None,
+                     serve_cfg=ServeConfig(mode="int8"))
+
+
+def test_serve_config_validates():
+    with pytest.raises(ValueError, match="mode"):
+        ServeConfig(mode="bf16")
+    with pytest.raises(ValueError, match="buckets"):
+        ServeConfig(buckets=())
+    with pytest.raises(ValueError, match="buckets"):
+        ServeConfig(buckets=(0, 2))
+    assert ServeConfig(buckets=[1, "2"]).buckets == (1, 2)  # normalized
+
+
+def test_deprecated_kwargs_shim(tiny_setup):
+    """The pre-ServeConfig keyword surface still works for one release —
+    folded into a ServeConfig with a DeprecationWarning — and mixing the
+    two construction paths is rejected."""
+    cfg, params, images = tiny_setup
+    with pytest.warns(DeprecationWarning, match="serve_cfg"):
+        server = VisionServer(cfg, params, mode="float", buckets=(1, 2))
+    assert server.serve_cfg == ServeConfig(mode="float", buckets=(1, 2))
+    server.submit_many(images[:2])
+    assert server.run()["requests"] == 2
+    with pytest.raises(ValueError, match="not both"):
+        VisionServer(cfg, params, serve_cfg=ServeConfig(),
+                     buckets=(1,))
+
+
+def test_make_server_factory():
+    """`make_server` is the one-call construction path: registry config
+    resolution (including head-mask override), param init, and — for
+    int8 — quantization + synthetic-bank calibration, all driven by the
+    ServeConfig's build fields."""
+    from repro.launch.vision_serve import make_server
+    server = make_server("vit_edge", ServeConfig(buckets=(1, 2)))
+    images = np.random.default_rng(5).standard_normal(
+        (3, server.cfg.image, server.cfg.image, 3)).astype(np.float32)
+    server.submit_many(images)
+    assert server.run()["requests"] == 3
+
+    q = make_server("vit_edge",
+                    ServeConfig(mode="int8", buckets=(2,), calib_images=4))
+    assert q.qparams is not None and q.calibrator is not None
+    q.submit_many(images[:2])
+    assert q.run()["requests"] == 2
+
+    masked = make_server(
+        "vit_edge", ServeConfig(buckets=(1,),
+                                head_mask=((1, 0, 1, 0),) * 4))
+    assert masked.cfg.head_mask == ((1, 0, 1, 0),) * 4
+    masked.submit(images[0])
+    assert masked.run()["requests"] == 1
 
 
 @pytest.mark.parametrize("name", vision_registry.list_models())
@@ -88,7 +143,8 @@ def test_server_roundtrip_every_registered_model(name):
     params = vision_registry.init_params(jax.random.PRNGKey(0), cfg)
     images = np.random.default_rng(1).standard_normal(
         (3, cfg.image, cfg.image, 3)).astype(np.float32)
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2)))
     reqs = server.submit_many(images)
     stats = server.run()
     assert stats["requests"] == 3
@@ -107,8 +163,9 @@ def test_server_int8_roundtrip_swin():
     cal = calibrate(qparams, cfg, images[:2], n_batches=1)
     out = {}
     for mode in ("float", "int8"):
-        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                              mode=mode, buckets=(4,))
+        server = VisionServer(
+            cfg, params, qparams=qparams, calibrator=cal,
+            serve_cfg=ServeConfig(mode=mode, buckets=(4,)))
         server.submit_many(images)
         server.run()
         out[mode] = np.stack([r.logits for r in server.done])
@@ -128,8 +185,9 @@ def test_server_int8_roundtrip_tnt():
     cal = calibrate(qparams, cfg, images[:2], n_batches=1)
     out = {}
     for mode in ("float", "int8"):
-        server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                              mode=mode, buckets=(4,))
+        server = VisionServer(
+            cfg, params, qparams=qparams, calibrator=cal,
+            serve_cfg=ServeConfig(mode=mode, buckets=(4,)))
         server.submit_many(images)
         server.run()
         out[mode] = np.stack([r.logits for r in server.done])
@@ -144,7 +202,7 @@ def test_pallas_and_xla_backends_agree(tiny_setup):
     logits = {}
     for backend in ("xla", "pallas"):
         bcfg = dataclasses.replace(cfg, backend=backend)
-        server = VisionServer(bcfg, params, mode="float", buckets=(4,))
+        server = VisionServer(bcfg, params, serve_cfg=ServeConfig(buckets=(4,)))
         server.submit_many(images[:4])
         server.run()
         logits[backend] = np.stack([r.logits for r in server.done])

@@ -11,8 +11,8 @@ import pytest
 from repro.core import schedule as sched_lib
 from repro.core.quant import QTensor, ptq_tolerance
 from repro.distributed import sharding as shd
-from repro.launch.vision_serve import (VisionServer, calibrate,
-                                       round_buckets)
+from repro.launch.vision_serve import (ServeConfig, VisionServer,
+                                       calibrate, round_buckets)
 from repro.launch.vision_serve import main as vision_serve_main
 from repro.models import vision_registry, vit
 
@@ -120,8 +120,9 @@ def test_single_device_server_unchanged(tiny_vit):
     """data_parallel=1 (the default) must not build a mesh or touch the
     buckets — the dev-1 CI leg serves exactly the old path."""
     cfg, params, images = tiny_vit
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4),
-                          data_parallel=1)
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(1, 2, 4), data_parallel=1))
     assert server.mesh is None and server.dp == 1
     assert server.buckets == (1, 2, 4)
     server.submit_many(images[:3])
@@ -144,7 +145,8 @@ def test_run_stats_do_not_mix_prior_runs(tiny_vit):
     """run() on an already-drained server must report zeros (same schema),
     not recompute percentiles over every PRIOR run's requests."""
     cfg, params, images = tiny_vit
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    server = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2, 4)))
     server.submit_many(images)
     first = server.run()
     assert first["requests"] == len(images)
@@ -174,9 +176,10 @@ def test_sharded_serving_parity_every_model(name):
     for mode in ("float", "int8"):
         out = {}
         for dp in (1, NDEV):
-            server = VisionServer(cfg, params, qparams=qparams,
-                                  calibrator=cal, mode=mode,
-                                  buckets=(1, 2, 4, 8), data_parallel=dp)
+            server = VisionServer(
+                cfg, params, qparams=qparams, calibrator=cal,
+                serve_cfg=ServeConfig(mode=mode, buckets=(1, 2, 4, 8),
+                                      data_parallel=dp))
             server.submit_many(images)
             stats = server.run()
             assert stats["requests"] == len(images)
@@ -198,14 +201,15 @@ def test_padding_path_five_requests_four_devices():
     params = vision_registry.init_params(jax.random.PRNGKey(0), cfg)
     images = np.random.default_rng(2).standard_normal(
         (5, cfg.image, cfg.image, 3)).astype(np.float32)
-    server = VisionServer(cfg, params, mode="float",
-                          buckets=(1, 2, 4, 8), mesh=_mesh(4))
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(1, 2, 4, 8), mesh=_mesh(4)))
     assert server.buckets == (4, 8)
     reqs = server.submit_many(images)
     stats = server.run()
     assert stats["requests"] == 5 and stats["devices"] == 4
     assert stats["batches"] == 1 and stats["padded"] == 3
-    solo = VisionServer(cfg, params, mode="float", buckets=(1,))
+    solo = VisionServer(cfg, params, serve_cfg=ServeConfig(buckets=(1,)))
     solo.submit(images[3])
     solo.run()
     np.testing.assert_allclose(reqs[3].logits, solo.done[0].logits,
@@ -271,8 +275,9 @@ def test_bucket_rounding_uses_data_axis_not_device_count(tiny_vit):
     must round to multiples of the DATA-axis size (2), not the total
     device count (8) — rounding 2 up to 8 would pad every drain 4x."""
     cfg, params, _ = tiny_vit
-    server = VisionServer(cfg, params, mode="float", buckets=(2, 4, 8),
-                          mesh_shape="2x4")
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(2, 4, 8), mesh_shape="2x4"))
     assert (server.dp, server.mp, server.n_devices) == (2, 4, 8)
     assert server.buckets == (2, 4, 8)       # NOT (8,)
     assert server.mesh_shape == "2x4"
@@ -284,8 +289,9 @@ def test_batch1_bucket_survives_on_model_mesh(tiny_vit):
     latency fast path: batch replicates over ``data``, heads still split
     over ``model``) even though data-axis rounding would lift it."""
     cfg, params, _ = tiny_vit
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 4),
-                          mesh_shape="4x2")
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(1, 4), mesh_shape="4x2"))
     assert (server.dp, server.mp) == (4, 2)
     assert server.buckets == (1, 4)
     server.submit(np.zeros((cfg.image, cfg.image, 3), np.float32))
@@ -299,11 +305,13 @@ def test_two_d_mesh_server_drain_parity(tiny_vit):
     column-sharded MLP under shard_map — matches the single-device
     server."""
     cfg, params, images = tiny_vit
-    solo = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4))
+    solo = VisionServer(cfg, params,
+                          serve_cfg=ServeConfig(buckets=(1, 2, 4)))
     solo.submit_many(images)
     solo.run()
-    server = VisionServer(cfg, params, mode="float", buckets=(1, 2, 4),
-                          mesh_shape="2x4")
+    server = VisionServer(
+        cfg, params,
+        serve_cfg=ServeConfig(buckets=(1, 2, 4), mesh_shape="2x4"))
     server.submit_many(images)
     stats = server.run()
     assert stats["requests"] == len(images)

@@ -1,8 +1,10 @@
 #!/usr/bin/env python3
 """Diff two BENCH_vision_serve.json files (baseline vs candidate).
 
-Joins bench rows on (model, mode, batch, fused, group_size, devices,
-mesh_shape, latency_path, serving, arrival_rate, sla_ms) — ``group_size``
+Joins bench rows on the shared `repro.core.benchkey` key (model, mode,
+batch, fused, group_size, devices, mesh_shape, latency_path, serving,
+arrival_rate, sla_ms, heads) — the SAME fields the bench sorts its rows
+by, so the two sides of the contract cannot drift.  ``group_size``
 is 1 on unfused/per-layer rows and the megakernel size on layer-group
 rows (absent in pre-grouping files: joined as 1); ``mesh_shape`` is the
 ``"DxM"`` (data, model) mesh of sharded rows (absent in pre-2-D-mesh
@@ -10,7 +12,10 @@ files: joined as ``"{devices}x1"``, which is what those rows were);
 ``serving``/``arrival_rate``/``sla_ms`` identify the Poisson open-stream
 load rows (continuous-batching admission layer vs drain baseline at a
 fixed offered load; absent on drain-sweep rows and in pre-load files:
-joined as ``""``/0/0) — and prints per-row throughput / p50 / p99 deltas
+joined as ``""``/0/0); ``heads`` is the surviving-head count on
+``--head-sweep`` pruning rows (0 everywhere else: the model's
+architectural head count) — and prints per-row throughput / p50 / p99
+deltas
 plus a per-model summary (including the recorded fusion_speedup
 movement), flagging rows that appear in only one file.  Intended uses:
 
@@ -37,10 +42,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
-from typing import Dict, Tuple
+from typing import Dict
 
-Key = Tuple[str, str, int, bool, int, int, str, bool, str, float, float]
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.core.benchkey import Key, row_key                 # noqa: E402
 
 REGRESSION_EXIT = 3
 CRASH_EXIT = 2
@@ -49,27 +58,11 @@ CRASH_EXIT = 2
 def load_rows(path: str) -> Dict[Key, dict]:
     with open(path) as f:
         record = json.load(f)
-    rows = {}
-    for r in record.get("runs", []):
-        # pre-fusion files have no "fused" field: those rows ARE the
-        # per-phase executor, so join them as fused=False; pre-sharding
-        # files have no "devices" field: single-device rows, devices=1;
-        # pre-grouping files have no "group_size": per-layer rows, 1;
-        # pre-2-D-mesh files have no "mesh_shape": their sharded rows
-        # were 1-D data meshes, "{devices}x1", and no "latency_path":
-        # every row was a queue-drain throughput row; pre-admission files
-        # have no "serving"/"arrival_rate"/"sla_ms": closed-list drains,
-        # joined as ""/0/0
-        devices = int(r.get("devices", 1))
-        key = (r["model"], r["mode"], int(r.get("batch", 0)),
-               bool(r.get("fused", False)), int(r.get("group_size", 1)),
-               devices, str(r.get("mesh_shape", f"{devices}x1")),
-               bool(r.get("latency_path", False)),
-               str(r.get("serving", "") or ""),
-               float(r.get("arrival_rate", 0.0) or 0.0),
-               float(r.get("sla_ms", 0.0) or 0.0))
-        rows[key] = r
-    return rows
+    # The join key is the bench's own sort key (repro.core.benchkey):
+    # one shared field list + defaults for rows predating an axis, so
+    # cross-version diffs keep joining (see benchkey's docstring for the
+    # per-axis back-compat semantics).
+    return {row_key(r): r for r in record.get("runs", [])}
 
 
 def _pct(new: float, old: float) -> float:
@@ -84,7 +77,7 @@ def compare(args) -> int:
     only_cand = sorted(set(cand) - set(base))
 
     hdr = (f"{'model':<10} {'mode':<6} {'batch':>5} {'fused':<7} "
-           f"{'grp':>3} {'mesh':>5} {'load':>15} "
+           f"{'grp':>3} {'mesh':>5} {'heads':>5} {'load':>15} "
            f"{'img/s old':>10} {'img/s new':>10} {'Δthr%':>7} "
            f"{'p50 old':>8} {'p50 new':>8} {'Δp50%':>7} "
            f"{'p99 old':>8} {'p99 new':>8} {'Δp99%':>7} {'fus_spd':>14}")
@@ -102,7 +95,7 @@ def compare(args) -> int:
         dp99 = _pct(cp99, bp99)
         worst = min(worst, dthr)
         (model, mode, batch, fused, group_size, devices, mesh_shape,
-         latency_path, serving, arrival_rate, sla_ms) = key
+         latency_path, serving, arrival_rate, sla_ms, heads) = key
         load = (f"{serving[:5]}@{arrival_rate:g}/{sla_ms:g}" if serving
                 else "")
         # fusion_speedup lives on the fused row of each A/B pair only
@@ -119,6 +112,7 @@ def compare(args) -> int:
               f"{'fused' if fused else 'unfused':<7} "
               f"{group_size:>3} "
               f"{mesh_shape + ('L' if latency_path else ''):>5} "
+              f"{heads if heads else '':>5} "
               f"{load:>15} "
               f"{b['throughput_img_s']:>10.1f} "
               f"{c['throughput_img_s']:>10.1f} {dthr:>+7.1f} "

@@ -40,7 +40,8 @@ import numpy as np                                           # noqa: E402
 
 from repro.core import hue as hue_lib                        # noqa: E402
 from repro.core.schedule import FusionPolicy                 # noqa: E402
-from repro.launch.vision_serve import VisionServer, calibrate  # noqa: E402
+from repro.launch.vision_serve import (ServeConfig,          # noqa: E402
+                                       VisionServer, calibrate)
 from repro.models import vision_registry                     # noqa: E402
 
 CRASH_EXIT = 2
@@ -64,10 +65,11 @@ def profile_model(name: str, mode: str, *, batch: int, warmup: int,
         calib = rng.standard_normal(
             (4, cfg.image, cfg.image, 3)).astype(np.float32)
         cal = calibrate(qparams, cfg, calib, n_batches=2)
-    server = VisionServer(cfg, params, qparams=qparams, calibrator=cal,
-                          mode=mode, buckets=(batch,),
-                          fusion_policy=policy, model_name=name,
-                          mesh_shape=mesh_shape)
+    server = VisionServer(
+        cfg, params, qparams=qparams, calibrator=cal,
+        serve_cfg=ServeConfig(mode=mode, buckets=(batch,),
+                              fusion_policy=policy, mesh_shape=mesh_shape),
+        model_name=name)
     # profile_stats stamps the server's mesh_shape into the report, so
     # per-mesh HUE artifacts join against the bench rows of that shape
     return server.profile_stats(batch, warmup=warmup, repeats=repeats)
